@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float | None, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    us = f"{us_per_call:.2f}" if us_per_call is not None else ""
+    print(f"{name},{us},{derived}", flush=True)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call [us]; blocks on jax arrays."""
+    def run():
+        out = fn(*args)
+        jax.block_until_ready(out)
+        return out
+
+    for _ in range(warmup):
+        run()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

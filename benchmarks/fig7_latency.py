@@ -1,0 +1,39 @@
+"""Paper Fig. 7 — per-sample latency vs batch size.
+
+The paper's observation: batch 8 ~ 2x the batch-1 latency, batch 16 ~ 3x.
+The model reproduces the curve; the v5e analogue shows the same throughput/
+latency trade at the decode-batching level.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from benchmarks.table2_throughput import BATCH_M
+from repro.core import batching as B
+from repro.core import perf_model as pm
+
+
+def main():
+    for name, net in pm.PAPER_NETWORKS.items():
+        base = None
+        for n in (1, 2, 4, 8, 16, 32):
+            hw = pm.HardwareSpec("b", m=BATCH_M[n], r=1, f_pu=100e6,
+                                 T_mem=pm.ZYNQ_BATCH.T_mem)
+            lat = B.batch_latency(net, hw, n, overlap="add")
+            ideal = B.batch_latency(net, hw, n, overlap="max")
+            base = base or lat
+            emit(f"fig7/{name}/batch{n}", lat * 1e6,
+                 f"latency_ms={lat*1e3:.3f};x_batch1={lat/base:.2f};"
+                 f"ideal_overlap_ms={ideal*1e3:.3f}")
+
+    # v5e decode-batch latency curve (1B-param model)
+    sizer = B.BatchSizer(n_params=int(1.1e9))
+    for row in B.efficiency_curve(sizer, [1, 8, 32, 64, 128, 240, 512]):
+        emit(
+            f"fig7/v5e-1b/batch{row['batch']}", row["step_s"] * 1e6,
+            f"tok_s={row['tokens_per_s']:.0f};mfu={row['model_flops_util']:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Kernel microbenchmarks on this host (interpret-mode wall time is NOT TPU
+performance — it validates plumbing and gives relative trends; the TPU
+numbers live in the §Roofline analysis)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.pruning import BlockPruneConfig
+from repro.core.quantization import q78_encode, quantize_int8
+from repro.core.sparse_format import to_block_sparse
+from repro.kernels import ops, ref
+
+
+def main():
+    rng = np.random.default_rng(0)
+    B, K, N = 64, 512, 512
+    x = jnp.asarray(rng.normal(size=(B, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
+
+    emit("kernel/batched_ffn/interp", time_fn(
+        lambda: ops.batched_ffn(x, w, b)), f"B={B},K={K},N={N}")
+    emit("kernel/batched_ffn/oracle", time_fn(
+        jax.jit(lambda: ref.batched_ffn(x, w, b))), "jnp reference")
+
+    qt = quantize_int8(w, axis=-1)
+    s = qt.scales.reshape(-1)
+    emit("kernel/quant_matmul/interp", time_fn(
+        lambda: ops.quant_matmul(x, qt.values, s)), "int8 weights")
+
+    aq, wq = q78_encode(x), q78_encode(w)
+    emit("kernel/q78_matmul/interp", time_fn(lambda: ops.q78_matmul(aq, wq)),
+         "bit-exact FPGA datapath")
+
+    for q in (0.0, 0.5, 0.9):
+        sp = to_block_sparse(w, q, BlockPruneConfig(bk=128, bn=128))
+        emit(f"kernel/block_sparse/q{q}", time_fn(
+            lambda sp=sp: ops.block_sparse_matmul(x, sp)),
+            f"payload_bytes={sp.payload_bytes():.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# §Perf hillclimb driver: re-measures the three chosen cells (baseline and
+# every iteration variant) under the final roofline analyzer, writing
+# artifacts/perf/<cell>_<variant>.json.  Run AFTER any analyzer change so
+# baseline and optimized numbers are always comparable:
+#
+#   PYTHONPATH=src python -m benchmarks.perf_cells [decode moe xlstm xlstm_seq]
+#
+# (xlstm_seq spawns nothing itself: REPRO_MLSTM_SEQUENTIAL=1 must be set in
+# the environment to reproduce the recurrent baseline.)
+
+import dataclasses
+import json
+import sys
+
+import repro.configs as C
+from repro.configs.base import TRAIN_4K, DECODE_32K
+from repro.launch.dryrun import analyze_cell, lower_cell
+
+
+def measure(tag, arch, shape, cfg=None, variant="baseline", **kw):
+    cell = lower_cell(arch, shape, cfg=cfg, variant=variant, **kw)
+    rec = analyze_cell(cell, cfg or C.get_config(arch), shape)
+    rec["variant"] = tag
+    os.makedirs("artifacts/perf", exist_ok=True)
+    with open(f"artifacts/perf/{arch}_{shape.name}_{tag}.json", "w") as f:
+        json.dump(rec, f, indent=1)
+    print(
+        f"[perf] {arch} {shape.name} {tag:16s} "
+        f"tc={rec['t_compute_s']:.4f}s tm={rec['t_memory_s']:.4f}s "
+        f"tcoll={rec['t_collective_s']:.4f}s dom={rec['dominant']} "
+        f"useful={rec['useful_flops_ratio']:.3f}",
+        flush=True,
+    )
+    return rec
+
+
+def decode_cell():
+    for v in ("baseline", "bf16", "int8", "int8_kv8"):
+        measure(v, "tinyllama-1.1b", DECODE_32K, variant=v)
+
+
+def moe_cell():
+    cfg0 = C.get_config("qwen2-moe-a2.7b")
+    cfg_pad = dataclasses.replace(cfg0, moe=dataclasses.replace(cfg0.moe, pad_to=64))
+    measure("ffTP-baseline", "qwen2-moe-a2.7b", TRAIN_4K, cfg=cfg0)
+    measure("EP64", "qwen2-moe-a2.7b", TRAIN_4K, cfg=cfg_pad)
+    measure("EP64-SP", "qwen2-moe-a2.7b", TRAIN_4K, cfg=cfg_pad, variant="sp")
+
+
+def xlstm_cell():
+    tag = "sequential" if os.environ.get("REPRO_MLSTM_SEQUENTIAL") else "chunkwise"
+    measure(tag, "xlstm-350m", TRAIN_4K)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1:] or ["decode", "moe", "xlstm"]
+    for w in which:
+        {"decode": decode_cell, "moe": moe_cell, "xlstm": xlstm_cell}[w]()

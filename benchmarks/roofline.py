@@ -1,0 +1,66 @@
+"""Roofline report: aggregates artifacts/dryrun/*.json into the §Roofline
+table (markdown written to artifacts/roofline.md, rows emitted as CSV)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+HEADER = (
+    "| arch | shape | mesh | t_compute | t_memory | t_collective | dominant "
+    "| roofline_t | useful_flops | note |"
+)
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def main(out_md: str = "artifacts/roofline.md"):
+    recs = []
+    for path in sorted(glob.glob("artifacts/dryrun/*.json")):
+        with open(path) as f:
+            recs.append(json.load(f))
+    if not recs:
+        emit("roofline/none", None, "no dry-run artifacts found — run repro.launch.dryrun")
+        return
+    lines = [HEADER, "|" + "---|" * 10]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        note = ""
+        dom = r["dominant"]
+        if dom == "memory":
+            cats = r.get("hlo_bytes_by_category", {})
+            if cats:
+                top = max(cats, key=cats.get)
+                note = f"mem:{top}"
+        elif dom == "collective":
+            colls = r["collectives"]["bytes_by_type"]
+            top = max(colls, key=colls.get)
+            note = f"coll:{top}"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_s(r['t_compute_s'])} | {fmt_s(r['t_memory_s'])} | "
+            f"{fmt_s(r['t_collective_s'])} | {dom} | {fmt_s(r['t_roofline_s'])} | "
+            f"{r['useful_flops_ratio']:.2f} | {note} |"
+        )
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            r["t_roofline_s"] * 1e6,
+            f"dom={dom};useful={r['useful_flops_ratio']:.2f};"
+            f"compute_frac={r['t_compute_s']/max(r['t_roofline_s'],1e-12):.2f}",
+        )
+    os.makedirs(os.path.dirname(out_md), exist_ok=True)
+    with open(out_md, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    emit("roofline/table", None, f"{len(recs)} cells -> {out_md}")
+
+
+if __name__ == "__main__":
+    main()

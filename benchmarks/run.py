@@ -1,0 +1,50 @@
+"""Benchmark runner — one module per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [table2 table3 table4 fig7 nopt kernels roofline]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (
+    fig7_latency,
+    kernel_bench,
+    nopt_validation,
+    roofline,
+    table2_throughput,
+    table3_energy,
+    table4_accuracy,
+)
+
+ALL = {
+    "table2": table2_throughput.main,
+    "table3": table3_energy.main,
+    "table4": table4_accuracy.main,
+    "fig7": fig7_latency.main,
+    "nopt": nopt_validation.main,
+    "kernels": kernel_bench.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in which:
+        try:
+            ALL[name]()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

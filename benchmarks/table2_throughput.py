@@ -1,0 +1,97 @@
+"""Paper Table 2 — throughput of batch processing / pruning vs software.
+
+Three result groups per network:
+  1. modeled FPGA batch design (m per the paper's bitstreams, batch 1..32) —
+     validated against the paper's measured ms/sample;
+  2. modeled FPGA pruning design (m=4, r=3, paper pruning factors);
+  3. measured software inference on THIS host (fp32, jit — the paper's BLAS
+     row analogue), plus the TPU v5e decode-model projection.
+
+Output: name,us_per_call,derived rows; derived carries the paper's measured
+value for eyeballing the reproduction error.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import perf_model as pm
+from repro.models import fcnet as F
+
+# paper Table 2, measured ms/sample: (network, batch) -> ms
+PAPER_BATCH = {
+    ("mnist-4layer", 1): 1.543, ("mnist-4layer", 2): 0.881, ("mnist-4layer", 4): 0.540,
+    ("mnist-4layer", 8): 0.375, ("mnist-4layer", 16): 0.285, ("mnist-4layer", 32): 0.318,
+    ("mnist-8layer", 1): 4.496, ("mnist-8layer", 2): 2.520, ("mnist-8layer", 4): 1.505,
+    ("mnist-8layer", 8): 1.012, ("mnist-8layer", 16): 0.768, ("mnist-8layer", 32): 0.914,
+    ("har-4layer", 1): 1.3817, ("har-4layer", 2): 0.7738, ("har-4layer", 4): 0.463,
+    ("har-4layer", 8): 0.313, ("har-4layer", 16): 0.262, ("har-4layer", 32): 0.287,
+    ("har-6layer", 1): 5.337, ("har-6layer", 2): 2.989, ("har-6layer", 4): 1.792,
+    ("har-6layer", 8): 1.250, ("har-6layer", 16): 1.027, ("har-6layer", 32): 1.203,
+}
+# m per bitstream (paper Section 6.1)
+BATCH_M = {1: 114, 2: 114, 4: 114, 8: 106, 16: 90, 32: 58}
+# pruning design measured ms/sample + pruning factor per net
+PAPER_PRUNE = {
+    "mnist-4layer": (0.72, 0.439), "mnist-8layer": (0.78, 1.072),
+    "har-4layer": (0.88, 0.161), "har-6layer": (0.94, 0.420),
+}
+
+
+def modeled_batch_ms(net, batch: int) -> float:
+    hw = pm.HardwareSpec("b", m=BATCH_M[batch], r=1, f_pu=100e6,
+                         T_mem=pm.ZYNQ_BATCH.T_mem)
+    # cycle-accurate compute term; the measured hardware serializes the two
+    # streams beyond the per-section FIFO (see fig7), so t_mem + t_calc
+    # matches Table 2 much closer than the idealized max() overlap.
+    t_calc = sum(pm.batch_datapath_cycles(l, hw.m, batch) for l in net) / hw.f_pu
+    t_mem = sum(pm.t_mem(l, hw, n_samples=batch, batch=batch) for l in net)
+    return (t_calc + t_mem) / batch * 1e3
+
+
+def modeled_prune_ms(net, q: float) -> float:
+    hw = pm.ZYNQ_PRUNE
+    return pm.network_t_proc(
+        net, hw, n_samples=1, batch=1, q_prune=q, q_overhead=64 / 48
+    ) * 1e3
+
+
+def main():
+    for name, net in pm.PAPER_NETWORKS.items():
+        for batch in (1, 2, 4, 8, 16, 32):
+            ms = modeled_batch_ms(net, batch)
+            paper = PAPER_BATCH[(name, batch)]
+            emit(
+                f"table2/{name}/hw-batch{batch}", ms * 1e3,
+                f"model_ms={ms:.3f};paper_ms={paper};ratio={ms/paper:.2f}",
+            )
+        q, paper = PAPER_PRUNE[name]
+        ms = modeled_prune_ms(net, q)
+        emit(
+            f"table2/{name}/hw-prune", ms * 1e3,
+            f"model_ms={ms:.3f};paper_ms={paper};q={q};ratio={ms/paper:.2f}",
+        )
+
+    # software rows: measured on this host (fp32 jit = BLAS analogue)
+    for name, cfgnet in F.PAPER_FCNETS.items():
+        params = F.init_params(cfgnet, jax.random.key(0))
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(1, cfgnet.sizes[0])), jnp.float32)
+        fwd = jax.jit(lambda p, x: F.forward_fp32(cfgnet, p, x))
+        us = time_fn(fwd, params, x)
+        emit(f"table2/{name}/sw-thishost-b1", us, f"ms={us/1e3:.3f}")
+
+    # TPU v5e projection: paper's best batch (16) as decode-style reuse
+    for name, net in pm.PAPER_NETWORKS.items():
+        n_params = pm.network_parameters(net)
+        t = pm.decode_step_time(n_params, batch=16, b_weight=2.0)
+        emit(
+            f"table2/{name}/v5e-model-b16", t["t_proc"] / 16 * 1e6,
+            f"bound={t['bound']}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Batched serving — the paper's batch processing at the request level.
+
+Runs the continuous-batching engine on a smoke-sized LM, comparing
+sequential (batch=1) service against continuous batching, and prints the
+modeled v5e weight-reuse economics for the full-size model.
+
+    PYTHONPATH=src python examples/batched_serving.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.core.batching import BatchSizer, efficiency_curve
+from repro.models.api import get_api
+from repro.serving.engine import Request, ServingEngine
+
+ARCH = "tinyllama-1.1b"
+N_REQ, MAX_NEW, PROMPT = 24, 12, 8
+
+cfg = C.get_config(ARCH, smoke=True)
+api = get_api(cfg)
+params = api.init_params(cfg, jax.random.key(0))
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab, size=PROMPT).astype(np.int32) for _ in range(N_REQ)]
+
+
+def serve(max_batch):
+    eng = ServingEngine(cfg, params, max_len=64, max_batch=max_batch)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=MAX_NEW))
+    t0 = time.time()
+    stats = eng.run_until_done()
+    return stats, time.time() - t0
+
+
+print(f"serving {N_REQ} requests x {MAX_NEW} new tokens ({ARCH}, smoke size, CPU)")
+for mb in (1, 4, 8):
+    stats, dt = serve(mb)
+    print(f"  max_batch={mb}: {dt:6.2f}s wall, {stats.decode_steps:4d} decode steps, "
+          f"mean batch {stats.mean_batch:.2f}")
+
+print("\nfull-size model economics on TPU v5e (modeled):")
+full = C.get_config(ARCH)
+n_params = get_api(full).n_params_exact(full)
+sizer = BatchSizer(n_params=n_params)
+print(f"  {ARCH}: {n_params/1e9:.2f}B params, machine-balance n_opt = {sizer.n_opt}")
+print(f"  {'batch':>6} {'ms/step':>9} {'tok/s':>10} {'MFU':>6}")
+for row in efficiency_curve(sizer, [1, 8, 32, 128, sizer.n_opt, 512]):
+    print(f"  {row['batch']:6d} {row['step_s']*1e3:9.3f} {row['tokens_per_s']:10.0f} "
+          f"{row['model_flops_util']:6.3f}")
+print("\nEach streamed weight byte is reused `batch` times — the paper's")
+print("batch-processing insight; n_opt is where reuse saturates the MXU.")

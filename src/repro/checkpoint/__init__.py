@@ -1,0 +1,7 @@
+from repro.checkpoint.store import (  # noqa: F401
+    AsyncCheckpointer,
+    all_steps,
+    latest_step,
+    restore,
+    save,
+)

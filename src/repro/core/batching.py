@@ -1,0 +1,178 @@
+"""Batch processing (paper Sections 4.2 / 5.5) as a scheduling layer.
+
+The paper's batch processing reuses an on-chip weight *section* across n
+samples before streaming the next section.  Two artifacts live here:
+
+1. ``SectionSchedule`` — the exact TDM schedule of the FPGA datapath (which
+   (section, sample) pair executes at each macro step), used by the faithful
+   fcnet reproduction and by the latency model of Fig. 7.
+
+2. ``BatchSizer`` — the serving-layer policy: given hardware constants and a
+   model, compute the machine-balance batch n_opt (paper Section 4.4) and
+   clamp it by a latency budget (the paper's throughput/latency trade-off,
+   Section 6.3).  The serving engine uses it to size decode batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator, Sequence
+
+from repro.core import perf_model as pm
+
+
+# ---------------------------------------------------------------------------
+# TDM section schedule (paper Fig. 2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SectionStep:
+    layer: int
+    section: int  # which m-neuron section of the layer
+    sample: int  # which of the n batch samples
+    new_weights: bool  # True iff this step needs a fresh weight transfer
+
+
+def section_schedule(
+    layer_sizes: Sequence[int], m: int, n: int
+) -> Iterator[SectionStep]:
+    """Yield the paper's processing order: all n samples of section 0, then
+    all n samples of section 1, ... then the next layer.  Weights are
+    transferred once per section (the first sample of the section)."""
+    for j in range(len(layer_sizes) - 1):
+        s_out = layer_sizes[j + 1]
+        for sec in range(math.ceil(s_out / m)):
+            for i in range(n):
+                yield SectionStep(j, sec, i, new_weights=(i == 0))
+
+
+def weight_transfers(layer_sizes: Sequence[int], m: int, n: int) -> dict:
+    """Count weight-matrix traffic with and without batching (words)."""
+    with_batch = 0
+    without = 0
+    for j in range(len(layer_sizes) - 1):
+        s_in, s_out = layer_sizes[j], layer_sizes[j + 1]
+        sections = math.ceil(s_out / m)
+        rows = min(m, s_out)  # per section (last may be ragged; upper bound)
+        per_section = rows * s_in
+        with_batch += sections * per_section  # once per section
+        without += sections * per_section * n  # refetched per sample
+    return {"batched": with_batch, "unbatched": without, "ratio": without / max(1, with_batch)}
+
+
+# ---------------------------------------------------------------------------
+# Latency model (paper Section 6.3 / Fig. 7)
+# ---------------------------------------------------------------------------
+
+
+def batch_latency(
+    net: Sequence[pm.LayerShape],
+    hw: pm.HardwareSpec,
+    n: int,
+    q_prune: float = 0.0,
+    q_overhead: float = 1.0,
+    overlap: str = "add",
+) -> float:
+    """Average per-sample completion latency under batch size n [seconds].
+
+    All n samples of a batch finish together (the batch sweeps sections), so
+    every sample's latency is the whole batch's processing time.
+
+    overlap="max" is the paper's idealized t_proc = max(t_calc, t_mem);
+    overlap="add" models the measured hardware (Fig. 7 / Table 2), where
+    per-section FIFO depth limits prefetch and the two streams largely
+    serialize: latency ~ t_mem + t_calc.  "add" reproduces the paper's
+    observed ~2x latency at n=8 and ~3x at n=16; "max" is the upper bound
+    the architecture was designed toward.
+    """
+    tc = sum(pm.t_calc(l, hw, n, q_prune) for l in net)
+    tm = sum(
+        pm.t_mem(l, hw, n_samples=n, batch=n, q_prune=q_prune, q_overhead=q_overhead)
+        for l in net
+    )
+    return tm + tc if overlap == "add" else max(tc, tm)
+
+
+def throughput_samples_per_s(
+    net: Sequence[pm.LayerShape],
+    hw: pm.HardwareSpec,
+    n: int,
+    q_prune: float = 0.0,
+    q_overhead: float = 1.0,
+    overlap: str = "max",
+) -> float:
+    t = batch_latency(net, hw, n, q_prune, q_overhead, overlap)
+    return n / t if t > 0 else float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Serving batch sizer (TPU adaptation)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSizer:
+    """Pick decode batch sizes at the machine-balance point.
+
+    n_opt is the paper's optimal batch size instantiated with TPU constants;
+    max_latency_s clamps it (paper Section 6.3: batching trades latency).
+    """
+
+    n_params: int
+    b_weight: float = 2.0
+    peak_flops: float = pm.TPU_V5E_PEAK_FLOPS
+    hbm_bw: float = pm.TPU_V5E_HBM_BW
+    n_chips: int = 1
+    max_latency_s: float | None = None
+    q_prune: float = 0.0
+    q_overhead: float = 1.0
+
+    @property
+    def n_opt(self) -> int:
+        n = pm.decode_n_opt(self.peak_flops, self.hbm_bw, self.b_weight)
+        return max(1, int(round(n * self.q_overhead)))
+
+    def step_time(self, batch: int, context_len: int = 0, kv_bytes_per_token: float = 0.0) -> float:
+        return pm.decode_step_time(
+            self.n_params,
+            batch,
+            kv_bytes_per_token,
+            context_len,
+            self.peak_flops,
+            self.hbm_bw,
+            self.b_weight,
+            self.n_chips,
+            self.q_prune,
+            self.q_overhead,
+        )["t_proc"]
+
+    def pick(self, waiting: int, context_len: int = 0, kv_bytes_per_token: float = 0.0) -> int:
+        """Batch size for the next decode step: min(waiting, n_opt), further
+        clamped so a step stays under the latency budget."""
+        n = min(max(1, waiting), self.n_opt)
+        if self.max_latency_s is not None:
+            while n > 1 and self.step_time(n, context_len, kv_bytes_per_token) > self.max_latency_s:
+                n //= 2
+        return n
+
+
+def efficiency_curve(sizer: BatchSizer, batches: Sequence[int]) -> list[dict]:
+    """tokens/s and per-token latency across batch sizes (Fig. 7 analogue)."""
+    out = []
+    for b in batches:
+        t = sizer.step_time(b)
+        out.append(
+            {
+                "batch": b,
+                "step_s": t,
+                "tokens_per_s": b / t,
+                "model_flops_util": min(
+                    1.0,
+                    2.0 * sizer.n_params * (1 - sizer.q_prune) * b
+                    / (t * sizer.peak_flops * sizer.n_chips),
+                ),
+            }
+        )
+    return out

@@ -1,0 +1,181 @@
+"""Weight encoding (paper Section 4.1 / 5.3).
+
+Two codecs:
+
+1. ``Q7.8`` — the paper's 16-bit fixed point format (1 sign, 7 integer,
+   8 fractional bits), with 32-bit (Q15.16) accumulation. Implemented
+   bit-exactly so the faithful reproduction computes with the same numerics
+   as the FPGA datapath.
+
+2. ``int8`` symmetric per-channel quantization — the TPU-native adaptation:
+   the MXU consumes int8 operands natively; per-output-channel scales keep
+   accuracy, accumulation is int32/fp32 (the analogue of the paper's 32-bit
+   accumulator).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Q7.8 fixed point (paper-faithful)
+# ---------------------------------------------------------------------------
+
+Q78_FRAC_BITS = 8
+Q78_SCALE = 1 << Q78_FRAC_BITS  # 256
+Q78_MIN = -(1 << 15)  # -32768
+Q78_MAX = (1 << 15) - 1  # 32767
+
+
+def q78_encode(x: jax.Array) -> jax.Array:
+    """float -> int16 Q7.8 with round-to-nearest and saturation."""
+    scaled = jnp.round(jnp.asarray(x, jnp.float32) * Q78_SCALE)
+    return jnp.clip(scaled, Q78_MIN, Q78_MAX).astype(jnp.int16)
+
+
+def q78_decode(q: jax.Array) -> jax.Array:
+    """int16 Q7.8 -> float32."""
+    return q.astype(jnp.float32) / Q78_SCALE
+
+
+def q78_quantize(x: jax.Array) -> jax.Array:
+    """Round-trip to Q7.8 representable values (float out)."""
+    return q78_decode(q78_encode(x))
+
+
+def q78_matmul(a_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """Fixed-point matmul with the paper's datapath numerics.
+
+    a_q, w_q: int16 Q7.8. 16x16 bit multiplies accumulated in 32 bit
+    (Q15.16), exactly as the paper's MAC units (Section 5.3). Returns the
+    Q15.16 int32 accumulator; use `q1516_decode` (or `q78_requantize`) on it.
+    """
+    acc = jax.lax.dot_general(
+        a_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+        (((a_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc
+
+
+def q1516_decode(acc: jax.Array) -> jax.Array:
+    """int32 Q15.16 accumulator -> float32."""
+    return acc.astype(jnp.float32) / (Q78_SCALE * Q78_SCALE)
+
+
+def q78_requantize(acc: jax.Array) -> jax.Array:
+    """Q15.16 accumulator -> Q7.8 activation (the hierarchy hand-off)."""
+    shifted = (acc + (1 << (Q78_FRAC_BITS - 1))) >> Q78_FRAC_BITS
+    return jnp.clip(shifted, Q78_MIN, Q78_MAX).astype(jnp.int16)
+
+
+def q78_relu(q: jax.Array) -> jax.Array:
+    """ReLU in the fixed-point domain (paper Section 5.4, combinational)."""
+    return jnp.maximum(q, 0).astype(q.dtype)
+
+
+def q78_sigmoid_plan(q: jax.Array) -> jax.Array:
+    """Piecewise linear approximation of sigmoid (PLAN, Amin et al. 1997).
+
+    Operates on Q7.8 input, returns Q7.8 output. Breakpoints per the PLAN
+    paper:  y = 1                      for x >= 5
+            y = 0.03125*x + 0.84375   for 2.375 <= x < 5
+            y = 0.125*x + 0.625       for 1 <= x < 2.375
+            y = 0.25*x + 0.5          for 0 <= x < 1
+    and y(-x) = 1 - y(x).
+    """
+    x = q78_decode(q)
+    ax = jnp.abs(x)
+    y = jnp.where(
+        ax >= 5.0,
+        1.0,
+        jnp.where(
+            ax >= 2.375,
+            0.03125 * ax + 0.84375,
+            jnp.where(ax >= 1.0, 0.125 * ax + 0.625, 0.25 * ax + 0.5),
+        ),
+    )
+    y = jnp.where(x < 0, 1.0 - y, y)
+    return q78_encode(y)
+
+
+# ---------------------------------------------------------------------------
+# int8 symmetric quantization (TPU-native)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QuantizedTensor:
+    """int8 values + per-channel fp32 scales (axis = last by convention)."""
+
+    values: jax.Array  # int8
+    scales: jax.Array  # fp32, broadcastable to values along quantized axis
+    axis: int
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    def dequantize(self) -> jax.Array:
+        return self.values.astype(jnp.float32) * self.scales
+
+
+def quantize_int8(w: jax.Array, axis: int = -1) -> QuantizedTensor:
+    """Symmetric per-channel int8 quantization along `axis`."""
+    w = jnp.asarray(w, jnp.float32)
+    axis = axis % w.ndim
+    reduce_axes = tuple(i for i in range(w.ndim) if i != axis)
+    amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    scales = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w / scales), -127, 127).astype(jnp.int8)
+    return QuantizedTensor(values=q, scales=scales, axis=axis)
+
+
+def int8_matmul(x: jax.Array, wq: QuantizedTensor) -> jax.Array:
+    """bf16/fp32 activations x int8 weights -> fp32.
+
+    Weights are dequantized tile-wise by the compiler/kernel; numerically
+    x @ (q * s). Accumulation fp32 (preferred_element_type) mirrors the
+    paper's 32-bit accumulator.
+    """
+    y = jax.lax.dot_general(
+        x.astype(jnp.bfloat16),
+        wq.values.astype(jnp.bfloat16),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return y * jnp.reshape(wq.scales, (1,) * (y.ndim - 1) + (-1,))
+
+
+def quantize_pytree(params, axis: int = -1, min_size: int = 4096):
+    """Quantize every >=2D leaf with >= min_size elements; keep others fp."""
+
+    def _q(leaf):
+        if leaf.ndim >= 2 and leaf.size >= min_size:
+            return quantize_int8(leaf, axis=axis)
+        return leaf
+
+    return jax.tree.map(_q, params)
+
+
+def quantization_error(w: jax.Array, axis: int = -1) -> float:
+    """Relative L2 error of int8 round-trip (diagnostic)."""
+    wq = quantize_int8(w, axis)
+    err = jnp.linalg.norm(w - wq.dequantize()) / (jnp.linalg.norm(w) + 1e-12)
+    return float(err)
+
+
+def bytes_per_weight(fmt: str) -> float:
+    """b_weight for the perf model, by format name."""
+    return {
+        "fp32": 4.0,
+        "bf16": 2.0,
+        "q78": 2.0,
+        "int8": 1.0,
+        "int4": 0.5,
+    }[fmt]

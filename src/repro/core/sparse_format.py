@@ -1,0 +1,265 @@
+"""Sparse weight storage formats (paper Section 5.6).
+
+Two formats:
+
+1. ``WZStream`` — the paper's streaming format, bit-exact: rows of the sparse
+   matrix are sequences of ``(w, z_w)`` tuples (w = surviving weight in Q7.8,
+   z_w = number of zeros preceding it, 5-bit unsigned). r = 3 tuples are
+   packed per 64-bit word: 3 x (16 + 5) = 63 bits, top bit unused, so words
+   stay aligned to the 64-bit memory border. q_overhead = 64 / 48 = 1.333.
+
+2. ``BlockSparse`` — the TPU-native format consumed by the Pallas kernel:
+   nonzero (bk, bn) blocks stored contiguously per block-column, with an
+   int32 row-block index per block (the analogue of z_w: position metadata
+   for a streamed payload) and a per-column block count.  Layout matches
+   ``kernels/block_sparse``'s scalar-prefetch walk.
+
+The WZ codec exists for fidelity (tests assert bit-exact round trips and the
+paper's own q_overhead); the block format is what ships on the TPU datapath.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import q78_decode, q78_encode
+from repro.core.pruning import BlockPruneConfig, block_mask
+
+# ---------------------------------------------------------------------------
+# Paper's (w, z)^r 64-bit word stream — bit-exact software codec
+# ---------------------------------------------------------------------------
+
+Z_BITS = 5
+Z_MAX = (1 << Z_BITS) - 1  # 31
+W_BITS = 16
+TUPLES_PER_WORD = 3  # r = 3 in the paper's design
+
+
+@dataclasses.dataclass
+class WZStream:
+    """Encoded sparse matrix: per-row uint64 word streams.
+
+    words:     list (len s_out) of np.uint64 arrays — one stream per row of
+               W^(j) in the paper's orientation (rows = output neurons).
+    n_tuples:  number of valid (w, z) tuples per row (tail of last word is
+               padding: zero-weight tuples are skipped by decode via count).
+    s_in:      row length of the dense matrix (columns of W^(j)).
+    """
+
+    words: list
+    n_tuples: list
+    s_in: int
+
+    @property
+    def total_words(self) -> int:
+        return int(sum(len(w) for w in self.words))
+
+    @property
+    def total_bytes(self) -> int:
+        return 8 * self.total_words
+
+    def q_overhead(self) -> float:
+        """Achieved storage overhead per surviving weight vs dense 16-bit."""
+        n = sum(self.n_tuples)
+        return self.total_bytes / max(1, n * 2)
+
+
+def _pack_word(tuples) -> np.uint64:
+    """Pack up to 3 (w_int16, z) tuples into one 64-bit word.
+
+    Layout (LSB first): tuple0 bits [0,21), tuple1 [21,42), tuple2 [42,63);
+    within a tuple: w in low 16 bits (two's complement), z in next 5 bits.
+    """
+    word = np.uint64(0)
+    for i, (w, z) in enumerate(tuples):
+        t = (np.uint64(np.uint16(w)) | (np.uint64(z) << np.uint64(16)))
+        word |= t << np.uint64(21 * i)
+    return word
+
+
+def _unpack_word(word: np.uint64):
+    out = []
+    for i in range(TUPLES_PER_WORD):
+        t = (word >> np.uint64(21 * i)) & np.uint64((1 << 21) - 1)
+        w = np.int16(np.uint16(t & np.uint64(0xFFFF)))
+        z = int(t >> np.uint64(16))
+        out.append((w, z))
+    return out
+
+
+def encode_row(row: np.ndarray) -> tuple[np.ndarray, int]:
+    """Encode one dense float row into the (w, z)^3 word stream.
+
+    Zero runs longer than Z_MAX are split by inserting explicit zero-valued
+    weights (w=0, z=Z_MAX) — the same escape the 5-bit field forces on the
+    hardware design.
+    Returns (uint64 words, n_tuples).
+    """
+    q = np.asarray(q78_encode(jnp.asarray(row, jnp.float32)))
+    tuples = []
+    zeros = 0
+    for v in q:
+        if v == 0:
+            zeros += 1
+            while zeros > Z_MAX:
+                tuples.append((np.int16(0), Z_MAX))
+                zeros -= Z_MAX + 1
+            continue
+        tuples.append((np.int16(v), zeros))
+        zeros = 0
+    # NOTE: trailing zeros need no tuples — decode pads with zeros to s_in.
+    n = len(tuples)
+    words = []
+    for i in range(0, n, TUPLES_PER_WORD):
+        chunk = tuples[i : i + TUPLES_PER_WORD]
+        words.append(_pack_word(chunk))
+    return np.asarray(words, np.uint64), n
+
+
+def decode_row(words: np.ndarray, n_tuples: int, s_in: int) -> np.ndarray:
+    """Decode a word stream back to a dense float32 row of length s_in."""
+    row = np.zeros(s_in, np.float32)
+    pos = 0
+    seen = 0
+    for word in words:
+        for w, z in _unpack_word(word):
+            if seen >= n_tuples:
+                break
+            pos += z
+            if w != 0:
+                row[pos] = float(np.float32(w) / 256.0)
+            pos += 1
+            seen += 1
+    return row
+
+
+def encode_matrix(w: np.ndarray) -> WZStream:
+    """Encode a dense (s_out, s_in) matrix, paper row orientation."""
+    w = np.asarray(w, np.float32)
+    words, counts = [], []
+    for row in w:
+        ws, n = encode_row(row)
+        words.append(ws)
+        counts.append(n)
+    return WZStream(words=words, n_tuples=counts, s_in=w.shape[1])
+
+
+def decode_matrix(s: WZStream) -> np.ndarray:
+    rows = [decode_row(w, n, s.s_in) for w, n in zip(s.words, s.n_tuples)]
+    return np.stack(rows).astype(np.float32)
+
+
+def stream_addresses(words: np.ndarray, n_tuples: int):
+    """The paper's offset-calculation IP (Section 5.6): absolute input
+    addresses for each surviving weight,  address_l = l + sum_{k<l} z_k,
+    computed iteratively per pipeline word with the carried offset o_reg."""
+    addrs = []
+    o_reg = 0
+    seen = 0
+    for word in words:
+        tuples = _unpack_word(word)
+        # address_i = o_reg + i + sum_{k<=i} z_k   (per the paper)
+        zsum = 0
+        for i, (w, z) in enumerate(tuples):
+            if seen >= n_tuples:
+                break
+            zsum += z
+            addrs.append(o_reg + i + zsum)
+            seen += 1
+        o_reg = addrs[-1] + 1 if addrs else o_reg
+    return addrs
+
+
+# ---------------------------------------------------------------------------
+# TPU block-sparse format (BSR-like, column-major block panels)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BlockSparse:
+    """Block-sparse weight matrix for the Pallas kernel.
+
+    Dense shape (K, N) with (bk, bn) blocks. For each block-column j (N/bn of
+    them), the nonzero blocks are stored contiguously:
+
+      blocks:     (n_blocks_padded, bk, bn) — payload, nonzero blocks in
+                  column-major panel order, padded with zero blocks so every
+                  block-column has the same count (static grid for the
+                  kernel; padded blocks multiply by zero).
+      block_rows: (n_cols, max_blocks) int32 — row-block index of each stored
+                  block (the z_w analogue). Padded entries repeat index 0.
+      counts:     (n_cols,) int32 — true nonzero-block count per column.
+    """
+
+    blocks: jax.Array
+    block_rows: jax.Array
+    counts: jax.Array
+    shape: tuple
+    cfg: BlockPruneConfig
+
+    @property
+    def max_blocks(self) -> int:
+        return self.block_rows.shape[1]
+
+    def q_prune(self) -> float:
+        K, N = self.shape
+        total = (K // self.cfg.bk) * (N // self.cfg.bn)
+        return 1.0 - float(jnp.sum(self.counts)) / total
+
+    def payload_bytes(self, b_weight: float = 2.0) -> float:
+        return float(jnp.sum(self.counts)) * self.cfg.bk * self.cfg.bn * b_weight
+
+    def metadata_bytes(self) -> int:
+        return int(jnp.sum(self.counts)) * 4 + 4 * self.counts.shape[0]
+
+    def q_overhead(self, b_weight: float = 2.0) -> float:
+        p = self.payload_bytes(b_weight)
+        return (p + self.metadata_bytes()) / max(1.0, p)
+
+
+def to_block_sparse(
+    w: jax.Array, q_prune: float, cfg: BlockPruneConfig | None = None
+) -> BlockSparse:
+    """Prune w to block sparsity q_prune and pack (see BlockSparse)."""
+    cfg = cfg or BlockPruneConfig()
+    K, N = w.shape
+    bm = np.asarray(block_mask(w, q_prune, cfg))  # (K/bk, N/bn)
+    n_rows_b, n_cols_b = bm.shape
+    wb = np.asarray(w).reshape(n_rows_b, cfg.bk, n_cols_b, cfg.bn)
+    counts = bm.sum(axis=0).astype(np.int32)  # per block-column
+    max_blocks = max(1, int(counts.max()))
+    blocks = np.zeros((n_cols_b * max_blocks, cfg.bk, cfg.bn), np.float32)
+    block_rows = np.zeros((n_cols_b, max_blocks), np.int32)
+    for j in range(n_cols_b):
+        rows = np.nonzero(bm[:, j])[0]
+        for s, i in enumerate(rows):
+            blocks[j * max_blocks + s] = wb[i, :, j, :]
+            block_rows[j, s] = i
+    return BlockSparse(
+        blocks=jnp.asarray(blocks),
+        block_rows=jnp.asarray(block_rows),
+        counts=jnp.asarray(counts),
+        shape=(K, N),
+        cfg=cfg,
+    )
+
+
+def block_sparse_to_dense(s: BlockSparse) -> jax.Array:
+    K, N = s.shape
+    cfg = s.cfg
+    out = np.zeros((K, N), np.float32)
+    blocks = np.asarray(s.blocks)
+    rows = np.asarray(s.block_rows)
+    counts = np.asarray(s.counts)
+    mb = s.max_blocks
+    for j in range(rows.shape[0]):
+        for k in range(int(counts[j])):
+            i = int(rows[j, k])
+            out[i * cfg.bk : (i + 1) * cfg.bk, j * cfg.bn : (j + 1) * cfg.bn] = blocks[
+                j * mb + k
+            ]
+    return jnp.asarray(out)

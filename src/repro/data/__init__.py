@@ -1,0 +1,9 @@
+from repro.data.pipeline import (  # noqa: F401
+    ClassifyDataConfig,
+    LMDataConfig,
+    TokenFileSource,
+    minibatches,
+    synthetic_classification,
+    synthetic_lm_batch,
+    synthetic_lm_stream,
+)

@@ -1,0 +1,51 @@
+"""Elastic scaling: re-plan the mesh after losing hosts and re-shard state.
+
+Checkpoints store leaves unsharded (checkpoint/store.py), so elasticity is
+a pure placement decision: pick the largest healthy mesh with the same axis
+*names*, rebuild NamedShardings from the same logical rules, device_put.
+The batch axis stays the global batch (data parallelism degree changes,
+per-device batch grows) so the training trajectory is unchanged up to
+numerics.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed import shardlib as sl
+
+
+def replan_mesh(
+    n_healthy_devices: int,
+    *,
+    model_parallel: int,
+    axis_names: Sequence[str] = ("data", "model"),
+    devices=None,
+) -> Mesh:
+    """Largest (data, model) mesh that fits the healthy device count while
+    keeping the model-parallel degree (params must still fit per device)."""
+    if n_healthy_devices < model_parallel:
+        raise ValueError(
+            f"{n_healthy_devices} devices cannot sustain model_parallel={model_parallel}"
+        )
+    data = n_healthy_devices // model_parallel
+    devices = devices if devices is not None else jax.devices()[: data * model_parallel]
+    import numpy as np
+
+    dev_array = np.asarray(devices).reshape(data, model_parallel)
+    return Mesh(dev_array, tuple(axis_names))
+
+
+def reshard_tree(tree, axes_tree, mesh: Mesh, rules: Optional[dict] = None):
+    """device_put every leaf onto `mesh` using logical axes (elastic move)."""
+
+    def place(x, ax):
+        spec = sl.spec_for(x.shape, *ax, mesh=mesh, rules=rules)
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(
+        place, tree, axes_tree, is_leaf=lambda x: not isinstance(x, (dict, list, tuple))
+    )

@@ -1,0 +1,160 @@
+"""Logical-axis sharding: models annotate tensors with *logical* axis names;
+a rule table (set by the launcher per mesh) maps them to physical mesh axes.
+
+This is the GSPMD discipline that lets one model definition run on a laptop
+(no mesh: every annotation is a no-op), a single pod (data, model), and a
+multi-pod mesh (pod, data, model) without edits — the core requirement for
+1000+-node runnability.
+
+Divisibility-aware: a rule is applied to a dimension only if the dimension is
+divisible by the product of the mapped mesh axis sizes; otherwise that
+dimension is left unsharded (e.g. whisper-tiny's 6 heads on a 16-way model
+axis).  This keeps every (arch x mesh) cell lowerable with zero per-arch
+special cases, at a documented efficiency cost reported by the roofline.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# logical axis name -> mesh axis name (or tuple of mesh axes)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),  # data parallel
+    "seq": None,  # sequence: unsharded by default (overridden for long ctx)
+    "seq_sp": None,  # residual-stream seq dim: mapped to `model` under
+    #                  Megatron-style sequence parallelism (launcher opt-in)
+    "cache_seq": None,  # decode KV cache length (sharded for long_500k)
+    "d": None,  # d_model: replicated on activations
+    "heads": "model",  # attention heads — tensor parallel
+    "kv_heads": "model",
+    "qkv": "model",  # fused qkv feature dim
+    "ff": "model",  # FFN hidden
+    "vocab": "model",  # embedding/LM-head vocab shard
+    "experts": "model",  # MoE expert parallelism
+    "expert_ff": None,  # intra-expert TP (used when E % model != 0)
+    "zero": ("pod", "data"),  # optimizer-state sharding axis (ZeRO)
+}
+
+
+def _get():
+    if not hasattr(_state, "stack"):
+        _state.stack = []
+    return _state.stack
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[dict] = None):
+    """Activate a mesh + logical rules for model-internal annotations."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _get().append((mesh, merged))
+    try:
+        with mesh:
+            yield
+    finally:
+        _get().pop()
+
+
+def current_mesh() -> Optional[Mesh]:
+    s = _get()
+    return s[-1][0] if s else None
+
+
+def current_rules() -> dict:
+    s = _get()
+    return s[-1][1] if s else dict(DEFAULT_RULES)
+
+
+def _axes_size(mesh: Mesh, axes: Union[str, Sequence[str], None]) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def _resolve(
+    mesh: Mesh,
+    rules: dict,
+    logical: Sequence[Optional[str]],
+    shape,
+    unconstrained_ok: bool = False,
+) -> P:
+    """Logical axes -> PartitionSpec, dropping non-divisible mappings.
+
+    A dropped mapping becomes ``P.UNCONSTRAINED`` for activation constraints
+    (let GSPMD propagate something sensible — pinning to replicated would
+    force gathers, e.g. gemma3's 8 heads on a 16-way model axis) and ``None``
+    (replicated) for jit in/out_shardings, which must be concrete.
+    """
+    spec = []
+    used: set = set()
+    dropped = P.UNCONSTRAINED if unconstrained_ok else None
+    for dim, name in zip(shape, logical):
+        mapped = rules.get(name) if name else None
+        if mapped is None:
+            spec.append(None)
+            continue
+        axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        size = _axes_size(mesh, axes)
+        if size <= 1 or dim % size != 0:
+            spec.append(dropped)
+            continue
+        used.update(axes)
+        spec.append(axes[0] if len(axes) == 1 else axes)
+    return P(*spec)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain activation sharding by logical axis names (no-op without
+    an active mesh)."""
+    s = _get()
+    if not s:
+        return x
+    mesh, rules = s[-1]
+    if len(logical) != x.ndim:
+        raise ValueError(f"{len(logical)} axes for rank-{x.ndim} tensor")
+    spec = _resolve(mesh, rules, logical, x.shape, unconstrained_ok=True)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_pinned(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Like ``shard`` but dropped mappings pin to replicated instead of
+    UNCONSTRAINED — used at cache boundaries where the layout must match the
+    declared in/out_shardings exactly (a mismatch makes GSPMD reshard the
+    whole buffer at the jit boundary)."""
+    s = _get()
+    if not s:
+        return x
+    mesh, rules = s[-1]
+    if len(logical) != x.ndim:
+        raise ValueError(f"{len(logical)} axes for rank-{x.ndim} tensor")
+    spec = _resolve(mesh, rules, logical, x.shape, unconstrained_ok=False)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_for(shape: Sequence[int], *logical: Optional[str], mesh: Optional[Mesh] = None,
+             rules: Optional[dict] = None) -> P:
+    """PartitionSpec for a parameter of `shape` with logical axes (used to
+    build in_shardings for jit)."""
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules()
+    if mesh is None:
+        return P()
+    return _resolve(mesh, rules, logical, shape)
+
+
+def named_sharding(mesh: Mesh, shape, *logical, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, *logical, mesh=mesh, rules=rules))

@@ -1,0 +1,111 @@
+"""Weight-stationary batched fully-connected layer (paper Sections 4.2/5.5).
+
+The FPGA datapath streams one weight *section* into on-chip FIFOs and reuses
+it for all n batch samples before fetching the next section.  The TPU-native
+expression of the same reuse is the *grid order* of a tiled matmul:
+
+    grid = (n_out_tiles, k_tiles, n_batch_tiles)   (batch innermost)
+
+with the weight BlockSpec's index_map independent of the batch index, so the
+(bk, bn) weight tile stays resident in VMEM while the kernel sweeps the batch
+tiles — each HBM weight byte is consumed `n` times, exactly the paper's
+batch-processing scheme with (m, r) -> (bn, bk) and section -> weight tile.
+
+The activation function runs in the kernel epilogue on the final k step
+(the paper's single shared activation unit behind a pipeline register —
+Section 5.5 — fused instead of time-multiplexed, which is the TPU analogue:
+no extra HBM round trip for the activation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+_ACTIVATIONS = {
+    "linear": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "sigmoid": jax.nn.sigmoid,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def _ffn_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, activation: str, k_tiles: int):
+    """One (batch-tile, out-tile) x k-step of y = act(x @ w + b).
+
+    acc_ref is a VMEM fp32 scratch accumulator (the paper's 32-bit
+    accumulator, Section 5.3). Grid = (out, batch, k); the weight tile index
+    map ignores the batch coordinate => weight-stationary across the batch
+    sweep when k is the innermost loop *per batch tile*.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_tiles - 1)
+    def _epilogue():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        y = _ACTIVATIONS[activation](y)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def batched_ffn(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activation: str = "relu",
+    block_b: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = activation(x @ w + b) with a weight-stationary Pallas schedule.
+
+    x: (B, K)  activations (any float dtype)
+    w: (K, N)  weights
+    b: (N,)    bias
+    Shapes must be multiples of the block sizes (use ops.batched_ffn for the
+    padded public wrapper).
+    """
+    B, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and b.shape == (N,)
+    assert B % block_b == 0 and N % block_n == 0 and K % block_k == 0, (
+        (B, K, N),
+        (block_b, block_k, block_n),
+    )
+    k_tiles = K // block_k
+    grid = (N // block_n, B // block_b, k_tiles)
+
+    kernel = functools.partial(_ffn_kernel, activation=activation, k_tiles=k_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # x tile: varies with (batch, k), not with out
+            pl.BlockSpec((block_b, block_k), lambda n, bt, k: (bt, k)),
+            # w tile: varies with (out, k) ONLY — batch-stationary reuse
+            pl.BlockSpec((block_k, block_n), lambda n, bt, k: (k, n)),
+            # bias tile: varies with out only
+            pl.BlockSpec((1, block_n), lambda n, bt, k: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda n, bt, k: (bt, n)),
+        out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w, b.reshape(1, N))

@@ -1,0 +1,123 @@
+"""Block-sparse matmul — the pruning datapath (paper Section 5.6), TPU-adapted.
+
+The FPGA design streams (w, z_w) tuples and uses an offset-calculation IP to
+find each weight's input activation.  The TPU equivalent (DESIGN.md §2) works
+at MXU-tile granularity: surviving (bk, bn) weight blocks are stored
+contiguously per block-column with an int32 row index each (the z_w
+analogue).  The kernel walks the block list with *scalar prefetch* — the
+block-row indices arrive in SMEM ahead of the grid so the BlockSpec
+index_map can compute each step's HBM source address, which is precisely the
+paper's offset-calculation IP one level up the memory hierarchy:
+
+    FPGA:  address_l = l + sum_{k<l} z_k      (element into BRAM)
+    here:  x tile    = block_rows[j, s]       (tile into VMEM)
+
+Pruned blocks are never read from HBM and never enter the MXU, so both t_mem
+and t_calc scale with (1 - q_prune) — the paper's throughput claim.  Because
+every block-column stores `max_blocks` entries (zero-padded), the grid is
+static; padding costs only the column's slack vs its true count, and the
+`counts` array lets the kernel skip the tail MACs with @pl.when.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sparse_format import BlockSparse
+
+
+def _bsmm_kernel(
+    # scalar prefetch operands (SMEM)
+    block_rows_ref,  # (n_cols * max_blocks,) flattened row index per block
+    counts_ref,  # (n_cols,)
+    # array operands
+    x_ref,  # (block_b, bk) activation tile, selected by block_rows
+    w_ref,  # (1, bk, bn) weight block payload
+    o_ref,  # (block_b, bn) output tile
+    acc_ref,  # VMEM scratch accumulator
+    *,
+    max_blocks: int,
+):
+    s = pl.program_id(2)  # position in the block-column's list
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    j = pl.program_id(1)  # block column
+    # Skip padded tail blocks: they hold zeros, but skipping also models the
+    # FPGA's "computations ... entirely skipped for neurons with only pruned
+    # weights" (Fig. 3) — on real TPU this also skips the HBM read via the
+    # index map pinning padded steps to the last valid block.
+    @pl.when(s < counts_ref[j])
+    def _mac():
+        acc_ref[...] += jnp.dot(
+            x_ref[...].astype(jnp.float32),
+            w_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(s == max_blocks - 1)
+    def _out():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def block_sparse_matmul(
+    x: jax.Array,
+    sparse: BlockSparse,
+    *,
+    block_b: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = x @ W  with W block-sparse.  x: (B, K) -> y: (B, N).
+
+    B must be a multiple of block_b; K, N are multiples of (bk, bn) by
+    construction of BlockSparse.
+    """
+    B, K = x.shape
+    Kw, N = sparse.shape
+    assert K == Kw, (K, Kw)
+    assert B % block_b == 0, (B, block_b)
+    cfg = sparse.cfg
+    n_cols = N // cfg.bn
+    mb = sparse.max_blocks
+
+    grid = (B // block_b, n_cols, mb)
+    flat_rows = sparse.block_rows.reshape(-1)  # (n_cols * mb,)
+
+    def x_index(bt, j, s, rows, counts):
+        # Activation tile for block s of column j: row-block rows[j*mb+s].
+        # Clamp padded steps to the last valid index (no out-of-bounds read;
+        # the MAC is skipped by @pl.when anyway).
+        return (bt, rows[j * mb + s])
+
+    def w_index(bt, j, s, rows, counts):
+        return (j * mb + s, 0, 0)
+
+    def o_index(bt, j, s, rows, counts):
+        return (bt, j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, cfg.bk), x_index),
+            pl.BlockSpec((1, cfg.bk, cfg.bn), w_index),
+        ],
+        out_specs=pl.BlockSpec((block_b, cfg.bn), o_index),
+        scratch_shapes=[pltpu.VMEM((block_b, cfg.bn), jnp.float32)],
+    )
+
+    kernel = functools.partial(_bsmm_kernel, max_blocks=mb)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
+        interpret=interpret,
+    )(flat_rows, sparse.counts, x, sparse.blocks)

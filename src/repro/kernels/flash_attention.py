@@ -1,0 +1,144 @@
+"""Flash attention as a Pallas TPU kernel (forward).
+
+The §Roofline analysis shows the pure-JAX chunked attention materializes its
+(cq x ck) score tiles in HBM (XLA does not fuse the online-softmax chain
+into the matmuls).  This kernel keeps the running (m, l, acc) statistics in
+VMEM scratch across the K/V grid walk — score tiles never leave the chip,
+which removes the dominant memory-term contribution of the 32k prefill
+cells (the paper's "keep the working set on-chip" discipline, one level up).
+
+Grid: (batch*kv_heads, q_blocks, kv_blocks), kv innermost so the VMEM
+accumulator carries across the kv sweep for one (bh, q) tile.  Causal +
+sliding-window masking via block-index arithmetic; GQA by folding the group
+dim into the q-tile rows.
+
+TPU is the target; CPU validation runs interpret=True against
+``ref.flash_attention`` (the dense oracle).  The training path keeps the
+pure-JAX custom-VJP flash (differentiable); this kernel is the
+serving/prefill fast path and is wired behind ``ops.flash_attention``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(
+    q_ref,  # (1, block_q * G, hd)
+    k_ref,  # (1, block_k, hd)
+    v_ref,  # (1, block_k, hd)
+    o_ref,  # (1, block_q * G, hd)
+    m_ref,  # VMEM (block_q * G, 1)
+    l_ref,  # VMEM (block_q * G, 1)
+    acc_ref,  # VMEM (block_q * G, hd)
+    *,
+    kv_blocks: int,
+    block_q: int,
+    block_k: int,
+    groups: int,
+    causal: bool,
+    window: int,
+    scale: float,
+):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (bq*G, hd)
+    k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq*G, bk)
+
+    # absolute positions: q rows are (q_pos, group) pairs, row // G = offset
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // groups
+    q_pos = qb * block_q + rows
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones(s.shape, jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, -1e30)
+
+    m_prev = m_ref[...]  # (bq*G, 1)
+    m_new = jnp.maximum(m_prev[:, 0], s.max(axis=1))[:, None]
+    alpha = jnp.exp(m_prev - m_new)  # (bq*G, 1)
+    p = jnp.exp(s - m_new)  # (bq*G, bk)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)[:, None]
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0],
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kb == kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KVH, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pallas flash attention (GQA-aware).  Sq/Sk must be multiples of the
+    block sizes (ops.flash_attention pads)."""
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    scale = 1.0 / math.sqrt(hd)
+    q_blocks, kv_blocks = Sq // block_q, Sk // block_k
+
+    # fold (B, KVH) into one grid axis; q rows interleave (q_pos, group)
+    qf = (
+        q.reshape(B, Sq, KVH, G, hd)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(B * KVH, Sq * G, hd)
+    )
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KVH, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KVH, Sk, hd)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        kv_blocks=kv_blocks, block_q=block_q, block_k=block_k, groups=G,
+        causal=causal, window=window or 0, scale=scale,
+    )
+    of = pl.pallas_call(
+        kernel,
+        grid=(B * KVH, q_blocks, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q * G, hd), lambda bh, qb, kb: (bh, qb, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, qb, kb: (bh, kb, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, qb, kb: (bh, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q * G, hd), lambda bh, qb, kb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KVH, Sq * G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * G, 1), jnp.float32),
+            pltpu.VMEM((block_q * G, 1), jnp.float32),
+            pltpu.VMEM((block_q * G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return (
+        of.reshape(B, KVH, Sq, G, hd).transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, hd)
+    )

@@ -1,0 +1,165 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+These pad ragged shapes to block multiples, pick interpret mode automatically
+off-TPU (so the whole framework runs CPU-correct while targeting TPU), and
+expose a uniform fp32/bf16 API used by the models and the serving engine.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_format import BlockSparse
+from repro.kernels import batched_ffn as _bffn
+from repro.kernels import block_sparse as _bs
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quant_matmul as _qmm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_b", "block_n", "block_k", "interpret"))
+def batched_ffn(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "relu",
+    block_b: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """act(x @ w + b), weight-stationary Pallas schedule, padded as needed."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, K = x.shape
+    N = w.shape[1]
+    block_b = min(block_b, max(8, B))
+    xp = _pad_dim(_pad_dim(x, 0, block_b), 1, block_k)
+    wp = _pad_dim(_pad_dim(w, 0, block_k), 1, block_n)
+    bp = _pad_dim(b, 0, block_n)
+    y = _bffn.batched_ffn(
+        xp, wp, bp,
+        activation=activation,
+        block_b=block_b, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )
+    return y[:B, :N]
+
+
+def block_sparse_matmul(
+    x: jax.Array,
+    sparse: BlockSparse,
+    block_b: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """x @ W_blocksparse. Pads the batch dim only (K/N are block-aligned)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B = x.shape[0]
+    block_b = min(block_b, max(8, B))
+    xp = _pad_dim(x, 0, block_b)
+    y = _bs.block_sparse_matmul(xp, sparse, block_b=block_b, interpret=interpret)
+    return y[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_b", "block_n", "block_k", "interpret"))
+def quant_matmul(
+    x: jax.Array,
+    w_q: jax.Array,
+    scales: jax.Array,
+    activation: str = "linear",
+    block_b: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """act((x @ int8_w) * scales), int8 weight stream."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, K = x.shape
+    N = w_q.shape[1]
+    block_b = min(block_b, max(8, B))
+    xp = _pad_dim(_pad_dim(x, 0, block_b), 1, block_k)
+    wp = _pad_dim(_pad_dim(w_q, 0, block_k), 1, block_n)
+    sp = _pad_dim(scales.reshape(-1), 0, block_n)
+    y = _qmm.quant_matmul(
+        xp, wp, sp,
+        activation=activation,
+        block_b=block_b, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )
+    return y[:B, :N]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Pallas flash attention; pads ragged sequence lengths.
+
+    Padding keys are masked via the causal/window logic: padded q rows are
+    sliced off, padded k columns sit at positions > every real q position,
+    so causal masking drops them (non-causal calls get an explicit window
+    covering only real keys is NOT applied — use causal=True or pre-mask).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq = q.shape[:2]
+    Sk = k.shape[1]
+    block_q = min(block_q, max(8, Sq))
+    block_k = min(block_k, max(8, Sk))
+    qp = _pad_dim(q, 1, block_q)
+    kp = _pad_dim(k, 1, block_k)
+    vp = _pad_dim(v, 1, block_k)
+    o = _fa.flash_attention(
+        qp, kp, vp, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return o[:, :Sq]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "block_k", "interpret"))
+def q78_matmul(
+    a_q: jax.Array,
+    w_q: jax.Array,
+    block_b: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Bit-exact Q7.8 integer matmul -> Q15.16 int32."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, K = a_q.shape
+    N = w_q.shape[1]
+    block_b = min(block_b, max(8, B))
+    ap = _pad_dim(_pad_dim(a_q, 0, block_b), 1, block_k)
+    wp = _pad_dim(_pad_dim(w_q, 0, block_k), 1, block_n)
+    y = _qmm.q78_matmul_kernel(
+        ap, wp, block_b=block_b, block_n=block_n, block_k=block_k, interpret=interpret
+    )
+    return y[:B, :N]

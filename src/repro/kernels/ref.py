@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (correctness references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import q78_matmul as _q78_matmul_jnp
+from repro.core.sparse_format import BlockSparse, block_sparse_to_dense
+
+
+_ACTIVATIONS = {
+    "linear": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "sigmoid": jax.nn.sigmoid,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def batched_ffn(x, w, b, activation: str = "relu"):
+    """Oracle for kernels.batched_ffn: act(x @ w + b) in fp32."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return _ACTIVATIONS[activation](y).astype(x.dtype)
+
+
+def block_sparse_matmul(x, sparse: BlockSparse):
+    """Oracle: densify and matmul in fp32."""
+    w = block_sparse_to_dense(sparse)
+    return jnp.dot(x.astype(jnp.float32), w).astype(x.dtype)
+
+
+def quant_matmul(x, w_q, scales, activation: str = "linear"):
+    """Oracle: fp32 matmul on raw int8 then scale then activation."""
+    y = jnp.dot(x.astype(jnp.float32), w_q.astype(jnp.float32))
+    y = y * scales.astype(jnp.float32)[None, :]
+    return _ACTIVATIONS[activation](y).astype(x.dtype)
+
+
+def q78_matmul(a_q, w_q):
+    """Oracle: bit-exact integer matmul (core.quantization.q78_matmul)."""
+    return _q78_matmul_jnp(a_q, w_q)
+
+
+def flash_attention(q, k, v, causal=True, window=None):
+    """Oracle for kernels.flash_attention: the dense GQA attention."""
+    from repro.models.layers import dense_attention
+
+    return dense_attention(q, k, v, causal=causal, window=window)

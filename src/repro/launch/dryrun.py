@@ -1,0 +1,431 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+
+# Multi-pod dry-run: lower + compile every (architecture x input shape) on
+# the production meshes, prove memory fits, and extract the roofline terms.
+#
+# Run:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+#
+# The XLA_FLAGS line above MUST precede every jax import: jax locks the
+# device count on first backend init.  Do not replicate it in conftest.py —
+# smoke tests and benches run on 1 real device.
+
+import argparse
+import dataclasses
+import functools
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as C
+from repro.distributed import shardlib as sl
+from repro.launch import hlo_analysis as H
+from repro.launch import mesh as M
+from repro.models.api import get_api, input_specs
+from repro.training import optimizer as O
+from repro.training.trainer import make_train_step
+
+# ---------------------------------------------------------------------------
+# hardware constants (TPU v5e)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+# ---------------------------------------------------------------------------
+# sharding construction
+# ---------------------------------------------------------------------------
+
+
+def _shardings(mesh, rules, shapes_tree, axes_tree):
+    """NamedShardings for a pytree of ShapeDtypeStructs + logical axes."""
+
+    def one(sds, ax):
+        return NamedSharding(mesh, sl._resolve(mesh, rules, ax, sds.shape))
+
+    return jax.tree.map(one, shapes_tree, axes_tree)
+
+
+_BATCH_AXES = {
+    "tokens": ("batch", None),
+    "labels": ("batch", None),
+    "patches": ("batch", None, None),
+    "frames": ("batch", None, None),
+}
+
+
+def _batch_axes_of(batch_spec: dict) -> dict:
+    return {k: _BATCH_AXES[k] for k in batch_spec}
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.*)$")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type, incl. tuple types."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in a (post-SPMD) HLO module.
+
+    Per-device quantities (the SPMD module is the per-device program).  For
+    all-gather the *operand* is what each device sends (result/group);
+    we count result bytes for ag (upper bound of link traffic per device,
+    matching the ring-algorithm bytes actually moved through each link) and
+    result bytes for the others.
+    """
+    per_type = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        opm = re.match(r"([\w\[\],\s()]+?)\s+([\w\-]+)\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(2)
+        # normalize variants like all-reduce-start / all-gather-done
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start"):
+                base = c
+                break
+        if base is None:
+            continue
+        per_type[base] += _shape_bytes(opm.group(1))
+        counts[base] += 1
+    total = sum(per_type.values())
+    return {"bytes_by_type": per_type, "counts": counts, "total_bytes": total}
+
+
+# ---------------------------------------------------------------------------
+# step builders (lowerable callables + arg specs + arg shardings)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LoweredCell:
+    arch: str
+    shape_name: str
+    mode: str
+    mesh_desc: str
+    lowered: object
+    compiled: object
+    seconds_lower: float
+    seconds_compile: float
+
+
+def _quantized_axes(axes, params_q_spec):
+    """Axes for a quantize_for_serving'd params tree: q keeps the weight's
+    axes, s drops the contraction axis."""
+
+    def f(ax, leaf):
+        if isinstance(leaf, dict) and "q" in leaf:
+            ax = tuple(ax)
+            return {"q": ax, "s": ax[:-2] + ax[-1:]}
+        return ax
+
+    return jax.tree.map(f, axes, params_q_spec, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def build_step(cfg, shape, mesh, rules, variant: str = "baseline"):
+    """Returns (fn, arg_specs: tuple, in_shardings: tuple, out_shardings).
+
+    variant (inference modes): "baseline" f32 params; "bf16" halves the
+    weight stream; "int8" quantize_for_serving (b_weight 1 + f32 scales) —
+    the paper's weight-encoding ladder on the TPU datapath.
+    """
+    from repro.models import layers as ML
+
+    api = get_api(cfg)
+    mode = shape.kind
+    params_spec = jax.eval_shape(functools.partial(api.init_params, cfg), jax.random.key(0))
+    params_axes = api.param_axes(cfg)
+    if mode != "train" and variant == "bf16":
+        params_spec = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            if jnp.issubdtype(s.dtype, jnp.floating) else s,
+            params_spec,
+        )
+    elif mode != "train" and variant.startswith("int8"):
+        params_spec = jax.eval_shape(ML.quantize_for_serving, params_spec)
+        params_axes = _quantized_axes(params_axes, params_spec)
+    params_sh = _shardings(mesh, rules, params_spec, params_axes)
+    specs = input_specs(cfg, shape)
+
+    if mode == "train":
+        opt_cfg = O.OptimizerConfig()
+        opt_spec = jax.eval_shape(
+            functools.partial(O.init_opt_state, opt_cfg), params_spec
+        )
+        opt_axes = O.opt_state_axes(opt_cfg, params_axes)
+        opt_sh = _shardings(mesh, M.opt_rules(rules), opt_spec, opt_axes)
+        batch_spec = specs["batch"]
+        batch_sh = _shardings(mesh, rules, batch_spec, _batch_axes_of(batch_spec))
+        step = make_train_step(cfg, api.loss_fn, opt_cfg)
+
+        def train_step(params, opt_state, batch):
+            with sl.use_mesh(mesh, rules):
+                return step(params, opt_state, batch)
+
+        return (
+            train_step,
+            (params_spec, opt_spec, batch_spec),
+            (params_sh, opt_sh, batch_sh),
+            (params_sh, opt_sh, None),
+            (0, 1),  # donate params + opt state (updated in place)
+        )
+
+    cache_spec = specs["cache"]
+    if variant.endswith("kv8"):
+        # fp8 KV cache: halves the dominant decode stream.  Only the
+        # attention K/V buffers (leaves under an {"k","v"} attn cache) —
+        # recurrent states keep their dtypes.
+        def _kv8(path, s):
+            keyname = path[-1].key if hasattr(path[-1], "key") else ""
+            if keyname in ("k", "v") and jnp.issubdtype(s.dtype, jnp.floating):
+                return jax.ShapeDtypeStruct(s.shape, jnp.float8_e4m3fn)
+            return s
+
+        cache_spec = jax.tree_util.tree_map_with_path(_kv8, cache_spec)
+    cache_sh = _shardings(mesh, rules, cache_spec, api.cache_axes(cfg))
+    if mode == "prefill":
+        batch_spec = specs["batch"]
+        batch_sh = _shardings(mesh, rules, batch_spec, _batch_axes_of(batch_spec))
+
+        def prefill_step(params, batch, cache):
+            with sl.use_mesh(mesh, rules):
+                return api.prefill(cfg, params, batch, cache)
+
+        return (
+            prefill_step,
+            (params_spec, batch_spec, cache_spec),
+            (params_sh, batch_sh, cache_sh),
+            (None, cache_sh),
+            (2,),  # donate the cache
+        )
+
+    # decode
+    tok_spec, pos_spec = specs["tokens"], specs["pos"]
+    tok_sh = _shardings(mesh, rules, tok_spec, ("batch", None))
+    pos_sh = _shardings(mesh, rules, pos_spec, ("batch",))
+
+    def serve_step(params, cache, tokens, pos):
+        with sl.use_mesh(mesh, rules):
+            return api.decode_step(cfg, params, cache, tokens, pos)
+
+    return (
+        serve_step,
+        (params_spec, cache_spec, tok_spec, pos_spec),
+        (params_sh, cache_sh, tok_sh, pos_sh),
+        (None, cache_sh),
+        (1,),  # donate the cache
+    )
+
+
+def lower_cell(arch: str, shape, *, multi_pod: bool = False, remat: bool | None = None,
+               variant: str = "baseline", cfg=None):
+    """Lower + compile one (arch, shape, mesh) cell.  Returns LoweredCell."""
+    if cfg is None:
+        cfg = C.get_config(arch)
+    if remat is None:
+        remat = shape.kind == "train"
+    if remat and cfg.family not in ("audio",):
+        cfg = dataclasses.replace(cfg, remat=True)
+    mesh = M.make_production_mesh(multi_pod=multi_pod)
+    rules = M.rules_for(cfg, shape, sequence_parallel=(variant == "sp"))
+    fn, arg_specs, in_sh, out_sh, donate = build_step(cfg, shape, mesh, rules, variant=variant)
+    t0 = time.time()
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate)
+    lowered = jitted.lower(*arg_specs)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    return LoweredCell(
+        arch=arch,
+        shape_name=shape.name,
+        mode=shape.kind,
+        mesh_desc="2x16x16" if multi_pod else "16x16",
+        lowered=lowered,
+        compiled=compiled,
+        seconds_lower=t1 - t0,
+        seconds_compile=t2 - t1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# roofline extraction
+# ---------------------------------------------------------------------------
+
+
+def analyze_cell(cell: LoweredCell, cfg, shape) -> dict:
+    comp = cell.compiled
+    # trip-count-aware analysis of the post-SPMD module (hlo_analysis.py):
+    # XLA's aggregate cost_analysis counts while bodies once, which would
+    # drop the scanned layers' costs entirely.
+    hc = H.analyze(comp.as_text())
+    flops = hc.flops
+    bytes_accessed = hc.bytes
+    xla_cost = comp.cost_analysis()
+    if isinstance(xla_cost, list):
+        xla_cost = xla_cost[0]
+    mem = comp.memory_analysis()
+    mem_stats = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+    }
+    coll = {
+        "bytes_by_type": hc.collective_bytes,
+        "counts": hc.collective_counts,
+        "total_bytes": hc.total_collective_bytes,
+    }
+    bytes_by_cat = dict(hc.bytes_by_cat)
+
+    api = get_api(cfg)
+    n_params = api.n_params_exact(cfg)
+    n_active = cfg.n_active_params() if cfg.moe is not None else n_params
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        model_flops = 6.0 * n_active * B * S
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * n_active * B * S
+    else:  # decode: one token per sequence
+        model_flops = 2.0 * n_active * B
+
+    # per-device terms (the SPMD module is per-device; peaks are per-chip)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_collective = coll["total_bytes"] / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective),
+        key=lambda kv: kv[1],
+    )[0]
+    n_dev = 512 if cell.mesh_desc == "2x16x16" else 256
+    return {
+        "arch": cell.arch,
+        "shape": cell.shape_name,
+        "mode": cell.mode,
+        "mesh": cell.mesh_desc,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "hlo_bytes_by_category": bytes_by_cat,
+        "collectives": coll,
+        "memory": mem_stats,
+        "n_params": n_params,
+        "n_active_params": n_active,
+        "xla_flops_unweighted": float(xla_cost.get("flops", 0.0)),
+        "model_flops_global": model_flops,
+        "model_flops_per_device": model_flops / n_dev,
+        "useful_flops_ratio": (model_flops / n_dev) / flops if flops else 0.0,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "t_roofline_s": max(t_compute, t_memory, t_collective),
+        "dominant": dominant,
+        "roofline_fraction": (
+            max(t_compute, t_memory, t_collective)
+            and t_compute / max(t_compute, t_memory, t_collective)
+        ),
+        "seconds_lower": cell.seconds_lower,
+        "seconds_compile": cell.seconds_compile,
+    }
+
+
+def run_cell(arch: str, shape, multi_pod: bool, out_dir: str | None) -> dict:
+    cfg = C.get_config(arch)
+    cell = lower_cell(arch, shape, multi_pod=multi_pod)
+    rec = analyze_cell(cell, cfg, shape)
+    print(
+        f"[dryrun] {arch:24s} {shape.name:12s} {rec['mesh']:8s} "
+        f"flops/dev={rec['hlo_flops_per_device']:.3e} "
+        f"bytes/dev={rec['hlo_bytes_per_device']:.3e} "
+        f"coll={rec['collectives']['total_bytes']:.3e}B "
+        f"dom={rec['dominant']:10s} "
+        f"t={rec['t_roofline_s']*1e3:.2f}ms "
+        f"(lower {rec['seconds_lower']:.1f}s compile {rec['seconds_compile']:.1f}s)",
+        flush=True,
+    )
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape.name}_{rec['mesh'].replace('x','-')}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=C.ARCH_IDS)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    if args.all:
+        pairs = [(a, s) for a in C.ARCH_IDS for s in C.shapes_for(a)]
+    else:
+        assert args.arch, "--arch or --all"
+        shapes = {s.name: s for s in C.shapes_for(args.arch)}
+        pairs = [(args.arch, shapes[args.shape])] if args.shape else [
+            (args.arch, s) for s in C.shapes_for(args.arch)
+        ]
+    for arch, shape in pairs:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape, mp, args.out)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((arch, shape.name, mp, repr(e)[:200]))
+                print(f"[dryrun] FAIL {arch} {shape.name} mp={mp}: {e}", flush=True)
+    if failures:
+        print(f"[dryrun] {len(failures)} failures")
+        sys.exit(1)
+    print("[dryrun] all cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Production meshes and sharding-rule selection.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): (16, 16) -> (data, model) single pod of 256 v5e chips;
+(2, 16, 16) -> (pod, data, model) for the 512-chip two-pod dry-run.  DP runs
+over pod+data, TP/EP over model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.distributed import shardlib as sl
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this process has — used by tests/examples on CPU."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def rules_for(cfg, shape=None, *, zero_opt: bool = True,
+              sequence_parallel: bool = False) -> dict:
+    """Logical->physical rules for one (arch, shape) cell.
+
+    Baseline rules come from shardlib.DEFAULT_RULES; per-cell adjustments:
+      * long-context decode (global_batch below the data-axis size): shard
+        the KV cache / sequence over `data` instead of the (unshardable)
+        batch — sequence parallelism for the 500k cells;
+      * MoE archs whose expert count is not divisible by the model axis:
+        shard the expert FFN hidden dim instead (expert_ff -> model).
+    """
+    rules = dict(sl.DEFAULT_RULES)
+    if sequence_parallel and (shape is None or shape.kind in ("train", "prefill")):
+        # Megatron-SP: the residual stream between TP blocks is sharded on
+        # seq over `model`; GSPMD turns the per-block f32 all-reduces into
+        # bf16 all-gather + reduce-scatter pairs.
+        rules["seq_sp"] = "model"
+    if shape is not None and shape.kind == "decode":
+        # flash-decoding style: the KV cache shards along *sequence* over the
+        # model axis (attention reduces over seq -> small stat collectives),
+        # batch over data.  For batch < data-axis size (long_500k) the data
+        # axis joins the sequence shard too.
+        if shape.global_batch >= 16:
+            rules["cache_seq"] = "model"
+        else:
+            rules["cache_seq"] = ("data", "model")
+    if shape is not None and shape.kind == "prefill" and shape.global_batch < 16:
+        rules["seq"] = "data"
+        rules["cache_seq"] = "data"
+    if cfg is not None and cfg.moe is not None and cfg.moe.n_experts_padded % 16 != 0:
+        # expert count doesn't divide the model axis and no padding was
+        # configured: fall back to intra-expert TP
+        rules["experts"] = None
+        rules["expert_ff"] = "model"
+    return rules
+
+
+def opt_rules(rules: dict) -> dict:
+    """ZeRO-1: optimizer state additionally sharded over the data axes by
+    mapping the (otherwise replicated) d_model dimension onto them."""
+    r = dict(rules)
+    r["d"] = ("pod", "data")
+    return r

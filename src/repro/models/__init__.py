@@ -1,0 +1,1 @@
+"""Architecture zoo: the paper's FC nets + the 10 assigned architectures."""

@@ -1,0 +1,125 @@
+"""Uniform model API across families: one namespace of functions per config,
+so the trainer / server / dry-run never branch on architecture family.
+
+    api = get_api(cfg)
+    params = api.init_params(cfg, key)
+    loss, metrics = api.loss_fn(cfg, params, batch)          # batch incl. extras
+    logits, cache = api.prefill(cfg, params, batch, cache)
+    logits, cache = api.decode_step(cfg, params, cache, tok, pos)
+
+``input_specs`` produces ShapeDtypeStruct stand-ins for every input of the
+lowered step functions (the dry-run path: weak-type-correct, shardable, no
+device allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as E
+from repro.models import transformer as T
+from repro.models import vlm as V
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init_params: Callable
+    param_axes: Callable
+    loss_fn: Callable  # (cfg, params, batch) -> (loss, metrics)
+    prefill: Callable  # (cfg, params, batch, cache) -> (logits, cache)
+    decode_step: Callable  # (cfg, params, cache, tokens, pos) -> (logits, cache)
+    init_cache: Callable  # (cfg, batch, length, dtype) -> cache
+    cache_axes: Callable
+    n_params_exact: Callable
+    extra_keys: tuple = ()  # frontend-stub inputs in the batch dict
+    # absolute decode positions = prefix_len(cfg) + text position: VLMs
+    # prepend patch embeddings to the decoder sequence, so their KV cache
+    # slots are offset by n_patches.
+    prefix_len: Callable = staticmethod(lambda cfg: 0)
+
+
+def _t_prefill(cfg, params, batch, cache):
+    return T.prefill(cfg, params, batch["tokens"], cache)
+
+
+def _v_prefill(cfg, params, batch, cache):
+    return V.prefill(cfg, params, batch["tokens"], batch["patches"], cache)
+
+
+def _e_prefill(cfg, params, batch, cache):
+    return E.prefill(cfg, params, batch["tokens"], batch["frames"], cache)
+
+
+_TRANSFORMER_API = ModelAPI(
+    init_params=T.init_params, param_axes=T.param_axes, loss_fn=T.loss_fn,
+    prefill=_t_prefill, decode_step=T.decode_step, init_cache=T.init_cache,
+    cache_axes=T.cache_axes, n_params_exact=T.n_params_exact,
+)
+
+_VLM_API = ModelAPI(
+    init_params=V.init_params, param_axes=V.param_axes, loss_fn=V.loss_fn,
+    prefill=_v_prefill, decode_step=V.decode_step, init_cache=V.init_cache,
+    cache_axes=V.cache_axes, n_params_exact=V.n_params_exact,
+    extra_keys=("patches",),
+    prefix_len=staticmethod(lambda cfg: cfg.n_patches),
+)
+
+_ENCDEC_API = ModelAPI(
+    init_params=E.init_params, param_axes=E.param_axes, loss_fn=E.loss_fn,
+    prefill=_e_prefill, decode_step=E.decode_step, init_cache=E.init_cache,
+    cache_axes=E.cache_axes, n_params_exact=E.n_params_exact,
+    extra_keys=("frames",),
+)
+
+
+def get_api(cfg) -> ModelAPI:
+    if cfg.family == "audio":
+        return _ENCDEC_API
+    if cfg.family == "vlm":
+        return _VLM_API
+    return _TRANSFORMER_API  # dense / moe / ssm / hybrid
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input specs (dry-run)
+# ---------------------------------------------------------------------------
+
+
+def _extras_specs(cfg, api: ModelAPI, batch: int):
+    out = {}
+    if "patches" in api.extra_keys:
+        out["patches"] = jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.d_model), jnp.float32)
+    if "frames" in api.extra_keys:
+        out["frames"] = jax.ShapeDtypeStruct((batch, cfg.n_frames, cfg.d_model), jnp.float32)
+    return out
+
+
+def input_specs(cfg, shape, mode: str | None = None) -> dict:
+    """Stand-ins for the inputs of the step lowered for this shape cell.
+
+    mode defaults to the cell's kind: train -> {"batch": ...};
+    prefill -> {"batch": ..., "cache": ...};
+    decode -> {"tokens", "pos", "cache"}.
+    """
+    api = get_api(cfg)
+    mode = mode or shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if mode == "train":
+        return {"batch": {"tokens": tok, "labels": tok, **_extras_specs(cfg, api, B)}}
+    cache_dtype = jnp.dtype(cfg.compute_dtype)
+    cache = jax.eval_shape(functools.partial(api.init_cache, cfg, B, S, cache_dtype))
+    if mode == "prefill":
+        return {"batch": {"tokens": tok, **_extras_specs(cfg, api, B)}, "cache": cache}
+    if mode == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "cache": cache,
+        }
+    raise ValueError(mode)

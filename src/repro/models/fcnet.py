@@ -1,0 +1,180 @@
+"""The paper's fully-connected networks — the faithful reproduction target.
+
+Four evaluation networks (Table 2 footnotes):
+    MNIST 4-layer: 784 x 800 x 800 x 10
+    MNIST 8-layer: 784 x 800 x 800 x 800 x 800 x 800 x 800 x 10
+    HAR   4-layer: 561 x 1200 x 300 x 6
+    HAR   6-layer: 561 x 2000 x 1500 x 750 x 300 x 6
+
+Three inference datapaths, mirroring the paper's designs:
+  * ``forward_fp32``   — the software baseline (BLAS role).
+  * ``forward_q78``    — bit-exact Q7.8 fixed-point datapath of the FPGA
+                         accelerator (Section 5.3): int16 weights/activations,
+                         int32 (Q15.16) accumulation, ReLU/sigmoid-PLAN in
+                         fixed point.  Batch processing changes *scheduling*
+                         (weight reuse), never numerics, so this one function
+                         is the oracle for every batch size — asserted by
+                         tests against the section-scheduled evaluation.
+  * ``forward_pruned`` — masked inference (the pruning design's semantics);
+                         the (w, z)^3 stream codec in core/sparse_format is
+                         its storage format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantization as Q
+
+
+@dataclasses.dataclass(frozen=True)
+class FCNetConfig:
+    name: str
+    sizes: tuple  # (s_0, ..., s_{L-1})
+    hidden_act: str = "relu"
+    out_act: str = "sigmoid"
+
+    @property
+    def n_params(self) -> int:
+        return sum(a * b + b for a, b in zip(self.sizes[:-1], self.sizes[1:]))
+
+
+MNIST_4 = FCNetConfig("mnist-4layer", (784, 800, 800, 10))
+MNIST_8 = FCNetConfig("mnist-8layer", (784, 800, 800, 800, 800, 800, 800, 10))
+HAR_4 = FCNetConfig("har-4layer", (561, 1200, 300, 6))
+HAR_6 = FCNetConfig("har-6layer", (561, 2000, 1500, 750, 300, 6))
+
+PAPER_FCNETS = {c.name: c for c in (MNIST_4, MNIST_8, HAR_4, HAR_6)}
+
+
+def init_params(cfg: FCNetConfig, key):
+    params = []
+    for i, (a, b) in enumerate(zip(cfg.sizes[:-1], cfg.sizes[1:])):
+        k = jax.random.fold_in(key, i)
+        w = jax.random.normal(k, (a, b), jnp.float32) * jnp.sqrt(2.0 / a)
+        params.append({"w": w, "b": jnp.zeros((b,), jnp.float32)})
+    return params
+
+
+def param_axes(cfg: FCNetConfig):
+    return [{"w": ("d", "ff"), "b": ("ff",)} for _ in cfg.sizes[:-1]]
+
+
+_ACT = {"relu": lambda x: jnp.maximum(x, 0.0), "sigmoid": jax.nn.sigmoid,
+        "linear": lambda x: x}
+
+
+def forward_fp32(cfg: FCNetConfig, params, x: jax.Array) -> jax.Array:
+    """Software-baseline inference (the paper's BLAS competitor)."""
+    L = len(params)
+    for j, p in enumerate(params):
+        x = x @ p["w"] + p["b"]
+        x = _ACT[cfg.hidden_act if j < L - 1 else cfg.out_act](x)
+    return x
+
+
+def forward_q78(cfg: FCNetConfig, params, x: jax.Array) -> jax.Array:
+    """Bit-exact Q7.8 fixed-point inference (the FPGA datapath numerics).
+
+    Activations and weights in Q7.8 int16; transfer function accumulates in
+    Q15.16 int32; bias is added in the accumulator domain; activation
+    functions run on the requantized Q7.8 value (ReLU combinational,
+    sigmoid via PLAN).  Returns float32 decode of the output layer.
+    """
+    L = len(params)
+    a_q = Q.q78_encode(x)
+    for j, p in enumerate(params):
+        w_q = Q.q78_encode(p["w"])
+        b_q = Q.q78_encode(p["b"]).astype(jnp.int32) << Q.Q78_FRAC_BITS  # to Q15.16
+        acc = Q.q78_matmul(a_q, w_q) + b_q[None, :]
+        z_q = Q.q78_requantize(acc)
+        act = cfg.hidden_act if j < L - 1 else cfg.out_act
+        if act == "relu":
+            a_q = Q.q78_relu(z_q)
+        elif act == "sigmoid":
+            a_q = Q.q78_sigmoid_plan(z_q)
+        else:
+            a_q = z_q
+    return Q.q78_decode(a_q)
+
+
+def forward_pruned(cfg: FCNetConfig, params, masks, x: jax.Array) -> jax.Array:
+    """Masked (pruned) fp32 inference — semantics of the pruning design."""
+    L = len(params)
+    for j, (p, m) in enumerate(zip(params, masks)):
+        x = x @ (p["w"] * m["w"]) + p["b"]
+        x = _ACT[cfg.hidden_act if j < L - 1 else cfg.out_act](x)
+    return x
+
+
+def forward_q78_sectioned(
+    cfg: FCNetConfig, params, x: jax.Array, m: int = 114, n: int | None = None
+) -> jax.Array:
+    """Q7.8 inference evaluated in the paper's section-by-section TDM order
+    (Section 5.5): per layer, process m output neurons at a time across all
+    n batch samples before moving to the next section.  Numerically identical
+    to ``forward_q78`` — the tests assert it — demonstrating that batch
+    processing is purely a data-movement schedule.
+    """
+    L = len(params)
+    n = n if n is not None else x.shape[0]
+    assert x.shape[0] % n == 0
+    a_q = Q.q78_encode(x)
+    for j, p in enumerate(params):
+        w_q = Q.q78_encode(p["w"])
+        b_q = Q.q78_encode(p["b"]).astype(jnp.int32) << Q.Q78_FRAC_BITS
+        s_out = w_q.shape[1]
+        cols = []
+        for sec_start in range(0, s_out, m):  # section sweep (weight reuse)
+            w_sec = w_q[:, sec_start : sec_start + m]
+            b_sec = b_q[sec_start : sec_start + m]
+            outs = []
+            for bi in range(0, a_q.shape[0], n):  # all n samples per section
+                acc = Q.q78_matmul(a_q[bi : bi + n], w_sec) + b_sec[None, :]
+                outs.append(acc)
+            cols.append(jnp.concatenate(outs, axis=0))
+        acc = jnp.concatenate(cols, axis=1)
+        z_q = Q.q78_requantize(acc)
+        act = cfg.hidden_act if j < L - 1 else cfg.out_act
+        a_q = Q.q78_relu(z_q) if act == "relu" else (
+            Q.q78_sigmoid_plan(z_q) if act == "sigmoid" else z_q
+        )
+    return Q.q78_decode(a_q)
+
+
+# ---------------------------------------------------------------------------
+# training (softmax classifier; the paper trains offline, we need real
+# accuracy numbers for the Table 4 reproduction)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg: FCNetConfig, params, batch, masks=None):
+    x, y = batch["x"], batch["y"]
+    L = len(params)
+    for j, p in enumerate(params):
+        w = p["w"] if masks is None else p["w"] * masks[j]["w"]
+        x = x @ w + p["b"]
+        if j < L - 1:
+            x = _ACT[cfg.hidden_act](x)
+    logp = jax.nn.log_softmax(x, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    return nll, {"loss": nll}
+
+
+def accuracy(cfg: FCNetConfig, params, x, y, masks=None) -> float:
+    if masks is None:
+        logits = forward_fp32(cfg, params, x)
+    else:
+        logits = forward_pruned(cfg, params, masks, x)
+    return float(jnp.mean(jnp.argmax(logits, -1) == y))
+
+
+def n_params_exact(cfg: FCNetConfig) -> int:
+    shapes = jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
+    return int(sum(x.size for x in jax.tree.leaves(shapes)))

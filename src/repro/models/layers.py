@@ -1,0 +1,660 @@
+"""Shared model layers: norms, RoPE, GQA attention (dense + flash + local),
+MLP — pure JAX, logically sharded via ``repro.distributed.shardlib``.
+
+Everything is functional: ``init_*`` returns a param pytree, ``*_axes``
+returns a matching pytree of logical-axis tuples (consumed by the launcher
+to build NamedShardings), and apply functions are pure.
+
+The attention stack matters for the roofline: ``train_4k``/``prefill_32k``
+use a chunked flash attention (custom_vjp, O(S) memory) so the 32k cells
+lower without materializing (S, S) score tensors; ``local`` layers (gemma3,
+recurrentgemma) use an exact sliding-window variant whose cost is O(S * W).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shardlib as sl
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """LeCun-normal over the fan-in axis."""
+    fan_in = shape[in_axis]
+    return jax.random.normal(key, shape, dtype) * (1.0 / math.sqrt(fan_in))
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# dense application with optional quantized weights
+# ---------------------------------------------------------------------------
+
+
+def qdense(x: jax.Array, w) -> jax.Array:
+    """x @ w where w is either an array or a quantized dict
+    {"q": int8, "s": fp32 per-output-channel scales}.
+
+    The quantized path streams 1 byte/weight from HBM (the paper's
+    weight-encoding technique, Section 4.1, at int8) and dequantizes in the
+    epilogue: (x @ q) * s with f32 accumulation — scales factor out of the
+    contraction.
+    """
+    dt = x.dtype
+    if isinstance(w, dict) and "q" in w:
+        y = jax.lax.dot_general(
+            x, w["q"].astype(dt),
+            (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return (y * w["s"].astype(jnp.float32)).astype(dt)
+    return x @ w.astype(dt)
+
+
+_QUANT_KEYS = ("w", "tok", "head")  # leaves consumed by qdense/embed/unembed
+
+
+def quantize_for_serving(params, min_size: int = 16384):
+    """int8-quantize matmul weights into the {"q", "s"} form qdense consumes.
+
+    Selection is by leaf name (w*, tok, head — the qdense/embedding call
+    sites); scales reduce over the contraction axis (-2) only, so stacked
+    per-layer / per-expert weights keep independent per-(layer, channel)
+    scales and scan slicing stays aligned: q (L, d, f) pairs with s (L, f).
+    Serving b_weight drops 4 -> 1 (the paper's Section 4.1 technique).
+    """
+
+    def q(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if not (
+            hasattr(leaf, "ndim") and leaf.ndim >= 2 and leaf.size >= min_size
+            and leaf.shape[-2] >= 64  # a real contraction dim, not a stacked vector
+            and (name.startswith("w") or name in _QUANT_KEYS)
+        ):
+            return leaf
+        lf = jnp.asarray(leaf, jnp.float32)
+        amax = jnp.max(jnp.abs(lf), axis=-2, keepdims=True)
+        scales = jnp.maximum(amax, 1e-8) / 127.0
+        qv = jnp.clip(jnp.round(lf / scales), -127, 127).astype(jnp.int8)
+        return {"q": qv, "s": jnp.squeeze(scales, axis=-2)}
+
+    return jax.tree_util.tree_map_with_path(q, params)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(d: int, kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}  # gemma-style (1+scale)
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def norm_axes(kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"scale": ("d",)}
+    return {"scale": ("d",), "bias": ("d",)}
+
+
+def apply_norm(p, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, base: float) -> jax.Array:
+    return base ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)  # (hd/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, base: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, base)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense attention oracle (reference; used for small S and by tests)
+# ---------------------------------------------------------------------------
+
+
+def _softcap(s, cap: float):
+    return jnp.tanh(s / cap) * cap if cap > 0.0 else s
+
+
+def dense_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KVH, hd)
+    v: jax.Array,  # (B, Sk, KVH, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_positions: Optional[jax.Array] = None,  # (B, Sq) absolute positions
+    kv_positions: Optional[jax.Array] = None,  # (B, Sk)
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(k.shape[1])[None], (B, k.shape[1]))
+    qg = q.reshape(B, Sq, KVH, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+    mask = jnp.ones((B, Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kv_positions[:, None, :] <= q_positions[:, :, None]
+    if window is not None:
+        mask &= kv_positions[:, None, :] > (q_positions[:, :, None] - window)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention: chunked, O(S) memory, custom VJP
+# ---------------------------------------------------------------------------
+
+
+def _chunk_mask(qpos, kpos, causal: bool, window: Optional[int]):
+    """(cq, ck) boolean mask from absolute positions."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
+)
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KVH, hd)
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    softcap: float = 0.0,
+    chunk_q: int = 512,
+    chunk_k: int = 512,
+) -> jax.Array:
+    """Exact attention, computed in (chunk_q x chunk_k) tiles with an online
+    softmax — the pure-JAX analogue of flash attention.  Differentiable via a
+    recomputing custom VJP (no (S, S) residuals).  `q_offset` is the absolute
+    position of q[?, 0] (prefill continuation / windowed decode).
+    """
+    o, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset, softcap, chunk_q, chunk_k)
+    return o
+
+
+def _pad_seq(x, c):
+    S = x.shape[1]
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return x
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, softcap, cq, ck):
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qp = _pad_seq(q, cq)
+    kp, vp = _pad_seq(k, ck), _pad_seq(v, ck)
+    nq, nk = qp.shape[1] // cq, kp.shape[1] // ck
+    # (B, KVH, G, nq, cq, hd) / (B, KVH, nk, ck, hd)
+    qb = qp.reshape(B, nq, cq, KVH, G, hd).transpose(0, 3, 4, 1, 2, 5) * scale
+    kb = kp.reshape(B, nk, ck, KVH, hd).transpose(0, 3, 1, 2, 4)
+    vb = vp.reshape(B, nk, ck, KVH, hd).transpose(0, 3, 1, 2, 4)
+    qpos = jnp.arange(nq * cq) + q_offset
+    kpos = jnp.arange(nk * ck)
+    kvalid = kpos < Sk  # padding mask
+
+    def q_chunk(qi, q_i):
+        # q_i: (B, KVH, G, cq, hd)
+        pos_i = jax.lax.dynamic_slice_in_dim(qpos, qi * cq, cq)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            k_j, v_j, pos_j, valid_j = inputs
+            # native-dtype operands + preferred_element_type: a bf16->f32
+            # convert of the whole K/V would otherwise be hoisted out of the
+            # scan by XLA, materializing (and resharding) a full-precision
+            # copy of the cache in HBM.
+            s = jnp.einsum(
+                "bkgqd,bkcd->bkgqc", q_i, k_j,
+                preferred_element_type=jnp.float32,
+            )
+            s = _softcap(s, softcap)
+            msk = _chunk_mask(pos_i, pos_j, causal, window) & valid_j[None, :]
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, KVH, G, cq), -1e30, jnp.float32),
+            jnp.zeros((B, KVH, G, cq), jnp.float32),
+            jnp.zeros((B, KVH, G, cq, hd), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            init,
+            (
+                kb.transpose(2, 0, 1, 3, 4),
+                vb.transpose(2, 0, 1, 3, 4),
+                kpos.reshape(nk, ck),
+                kvalid.reshape(nk, ck),
+            ),
+        )
+        l = jnp.maximum(l, 1e-30)
+        o_i = acc / l[..., None]
+        lse_i = m + jnp.log(l)
+        return o_i, lse_i
+
+    o_chunks, lse_chunks = jax.lax.map(
+        lambda qi: q_chunk(qi, jax.lax.dynamic_index_in_dim(qb, qi, 3, keepdims=False)),
+        jnp.arange(nq),
+    )
+    # o_chunks: (nq, B, KVH, G, cq, hd) -> (B, Sq, H, hd)
+    o = o_chunks.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * cq, H, hd)[:, :Sq]
+    lse = lse_chunks.transpose(1, 0, 4, 2, 3).reshape(B, nq * cq, H)[:, :Sq]
+    return o.astype(q.dtype), lse
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, softcap, cq, ck):
+    o, lse = _flash_fwd_impl(q, k, v, causal, window, q_offset, softcap, cq, ck)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, window, q_offset, softcap, cq, ck, res, do):
+    q, k, v, o, lse = res
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qp, op, dop = _pad_seq(q, cq), _pad_seq(o, cq), _pad_seq(do, cq)
+    lsep = jnp.pad(lse, ((0, 0), (0, (-Sq) % cq), (0, 0)), constant_values=0.0)
+    kp, vp = _pad_seq(k, ck), _pad_seq(v, ck)
+    nq, nk = qp.shape[1] // cq, kp.shape[1] // ck
+    qb = qp.reshape(B, nq, cq, KVH, G, hd).transpose(1, 0, 3, 4, 2, 5)  # (nq,B,KVH,G,cq,hd)
+    ob = op.reshape(B, nq, cq, KVH, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    dob = dop.reshape(B, nq, cq, KVH, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    lseb = lsep.reshape(B, nq, cq, KVH, G).transpose(1, 0, 3, 4, 2)  # (nq,B,KVH,G,cq)
+    kb = kp.reshape(B, nk, ck, KVH, hd).transpose(1, 0, 3, 2, 4)  # (nk,B,KVH,ck,hd)
+    vb = vp.reshape(B, nk, ck, KVH, hd).transpose(1, 0, 3, 2, 4)
+    qpos_all = jnp.arange(nq * cq) + q_offset
+    kpos_all = jnp.arange(nk * ck)
+    kvalid = kpos_all < Sk
+    # delta_i = rowsum(do * o)
+    delta = jnp.einsum(
+        "nbkgqd,nbkgqd->nbkgq", dob, ob, preferred_element_type=jnp.float32
+    )
+
+    def q_step(carry, inputs):
+        dk_acc, dv_acc = carry
+        q_i, do_i, lse_i, delta_i, qi = inputs
+        pos_i = jax.lax.dynamic_slice_in_dim(qpos_all, qi * cq, cq)
+
+        def kv_step(_, inputs2):
+            k_j, v_j, pos_j, valid_j = inputs2
+            s_raw = (
+                jnp.einsum(
+                    "bkgqd,bkcd->bkgqc", q_i, k_j,
+                    preferred_element_type=jnp.float32,
+                )
+                * scale
+            )
+            if softcap > 0.0:
+                t = jnp.tanh(s_raw / softcap)
+                s = t * softcap
+                dcap = 1.0 - t * t
+            else:
+                s = s_raw
+                dcap = None
+            msk = _chunk_mask(pos_i, pos_j, causal, window) & valid_j[None, :]
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            p = jnp.exp(s - lse_i[..., None])  # (B,KVH,G,cq,ck) f32
+            pc = p.astype(k_j.dtype)
+            dv_part = jnp.einsum(
+                "bkgqc,bkgqd->bkcd", pc, do_i, preferred_element_type=jnp.float32
+            )
+            dp = jnp.einsum(
+                "bkgqd,bkcd->bkgqc", do_i, v_j, preferred_element_type=jnp.float32
+            )
+            ds = p * (dp - delta_i[..., None])
+            if dcap is not None:
+                ds = ds * dcap
+            ds = jnp.where(msk[None, None, None], ds, 0.0)
+            dsc = ds.astype(k_j.dtype)
+            dq_i_part = (
+                jnp.einsum("bkgqc,bkcd->bkgqd", dsc, k_j, preferred_element_type=jnp.float32)
+                * scale
+            )
+            dk_part = (
+                jnp.einsum("bkgqc,bkgqd->bkcd", dsc, q_i, preferred_element_type=jnp.float32)
+                * scale
+            )
+            return None, (dk_part, dv_part, dq_i_part)
+
+        _, (dk_parts, dv_parts, dq_parts) = jax.lax.scan(
+            kv_step,
+            None,
+            (kb, vb, kpos_all.reshape(nk, ck), kvalid.reshape(nk, ck)),
+        )
+        dq_i = dq_parts.sum(0)
+        return (dk_acc + dk_parts, dv_acc + dv_parts), dq_i
+
+    zeros_kv = jnp.zeros((nk, B, KVH, ck, hd), jnp.float32)
+    (dkb, dvb), dqb = jax.lax.scan(
+        q_step, (zeros_kv, zeros_kv), (qb, dob, lseb, delta, jnp.arange(nq))
+    )
+    dq = dqb.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * cq, H, hd)[:, :Sq].astype(q.dtype)
+    dk = dkb.transpose(1, 0, 3, 2, 4).reshape(B, nk * ck, KVH, hd)[:, :Sk].astype(k.dtype)
+    dv = dvb.transpose(1, 0, 3, 2, 4).reshape(B, nk * ck, KVH, hd)[:, :Sk].astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention(
+    q, k, v, *, causal=True, window=None, q_offset=0, softcap=0.0,
+    dense_threshold: int = 1024, chunk: int = 512,
+):
+    """Dispatch: dense for small sequences, flash for long ones."""
+    if q.shape[1] <= dense_threshold and k.shape[1] <= dense_threshold:
+        qpos = jnp.arange(q.shape[1])[None] + q_offset
+        return dense_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_positions=jnp.broadcast_to(qpos, q.shape[:2]),
+        )
+    cq = min(chunk, max(128, q.shape[1]))
+    ck = min(chunk, max(128, k.shape[1]))
+    return flash_attention(q, k, v, causal, window, q_offset, softcap, cq, ck)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, S, KVH, hd)
+    v_cache: jax.Array,
+    pos: jax.Array,  # (B,) position of the new token (cache entries <= pos valid)
+    *,
+    window: Optional[int] = None,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Single-step attention against a KV cache (one new token per sequence).
+
+    The cache is a ring buffer of length S: slot i holds the most recent
+    absolute position p with p % S == i and p <= pos.  For a full-length
+    cache (S > pos) that degenerates to slot i == position i; for a
+    sliding-window cache (S == window) it is the rolling window.
+    """
+    B, S, KVH, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KVH, G, hd).astype(k_cache.dtype)
+    # native-dtype cache operands + f32 accumulation: casting the cache
+    # would materialize (and possibly reshard) a full f32 copy in HBM.
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    s = _softcap(s, softcap)
+    slot = jnp.arange(S)[None]  # (1, S)
+    kv_pos = pos[:, None] - ((pos[:, None] - slot) % S)  # absolute pos per slot
+    mask = kv_pos >= 0
+    if window is not None:
+        mask &= kv_pos > (pos[:, None] - window)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (QKV/O projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+
+def init_attn(cfg, key):
+    d, H, KVH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, H * hd)),
+        "wk": dense_init(ks[1], (d, KVH * hd)),
+        "wv": dense_init(ks[2], (d, KVH * hd)),
+        "wo": dense_init(ks[3], (H * hd, d)),
+    }
+
+
+def attn_axes():
+    return {"wq": ("d", "qkv"), "wk": ("d", "qkv"), "wv": ("d", "qkv"), "wo": ("qkv", "d")}
+
+
+def apply_attn(
+    cfg,
+    p,
+    x: jax.Array,  # (B, S, d)
+    *,
+    kind: str = "global",  # global | local
+    rope_base: Optional[float] = None,
+    cache: Optional[dict] = None,  # {"k": (B,S,KVH,hd), "v": ..., } decode path
+    pos: Optional[jax.Array] = None,  # (B,) decode positions
+    cross_kv: Optional[tuple] = None,  # (k, v) for cross-attention
+):
+    """Returns (out, new_cache).  Three modes:
+    - training/prefill (cache None): full/local causal attention over x;
+    - decode (cache given): write new token kv at pos, attend to cache;
+    - cross (cross_kv given): encoder-decoder cross attention (no mask).
+    """
+    B, S, d = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    window = cfg.local_window if kind == "local" else None
+    dt = x.dtype
+    q = qdense(x, p["wq"]).reshape(B, S, H, hd)
+    q = sl.shard(q, "batch", "seq", "heads", None)
+    if cross_kv is not None:
+        k, v = cross_kv
+        o = attention(q, k, v, causal=False, softcap=cfg.logit_softcap)
+        new_cache = cache
+    else:
+        k = qdense(x, p["wk"]).reshape(B, S, KVH, hd)
+        v = qdense(x, p["wv"]).reshape(B, S, KVH, hd)
+        k = sl.shard(k, "batch", "seq", "kv_heads", None)
+        v = sl.shard(v, "batch", "seq", "kv_heads", None)
+        base = rope_base if rope_base is not None else cfg.rope_base
+        if cache is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            q = apply_rope(q, positions, base)
+            k = apply_rope(k, positions, base)
+            o = attention(q, k, v, causal=True, window=window, softcap=cfg.logit_softcap)
+            new_cache = None
+        else:
+            positions = pos[:, None]  # (B, 1)
+            q = apply_rope(q, positions, base)
+            k = apply_rope(k, positions, base)
+            kc = _cache_update(cache["k"], k, pos)
+            vc = _cache_update(cache["v"], v, pos)
+            # pin to the declared cache layout: any deviation makes GSPMD
+            # reshard the whole cache at the step boundary (measured as a
+            # multi-GB all-gather per decode step before this constraint)
+            kc = sl.shard_pinned(kc, "batch", "cache_seq", "kv_heads", None)
+            vc = sl.shard_pinned(vc, "batch", "cache_seq", "kv_heads", None)
+            o = decode_attention(q, kc, vc, pos, window=window, softcap=cfg.logit_softcap)
+            new_cache = {"k": kc, "v": vc}
+    o = o.reshape(B, S, H * hd)
+    out = qdense(o, p["wo"])
+    return sl.shard(out, "batch", "seq_sp", None), new_cache
+
+
+def _cache_update(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Scatter one new (B, 1, KVH, hd) entry at per-sequence positions.
+
+    For a sliding-window cache (cache S == window size) the write index wraps
+    (ring buffer); masking in decode_attention uses absolute positions, so the
+    caller passes ``pos % window`` semantics via cache shape.
+    """
+    S = cache.shape[1]
+    idx = pos % S
+
+    def upd(c, n, i):
+        return jax.lax.dynamic_update_slice_in_dim(c, n.astype(c.dtype), i, axis=0)
+
+    return jax.vmap(upd)(cache, new, idx)
+
+
+def init_attn_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16):
+    KVH, hd = cfg.n_kv_heads, cfg.hd
+    z = jnp.zeros((batch, length, KVH, hd), dtype)
+    return {"k": z, "v": z}
+
+
+def attn_cache_axes():
+    return {"k": ("batch", "cache_seq", "kv_heads", None), "v": ("batch", "cache_seq", "kv_heads", None)}
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+
+GATED = ("silu", "swiglu", "geglu", "gelu_glu")
+
+
+def init_mlp(cfg, key, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, f)), "w_down": dense_init(ks[1], (f, d))}
+    if cfg.activation in GATED:
+        p["w_gate"] = dense_init(ks[2], (d, f))
+    return p
+
+
+def mlp_axes(cfg):
+    a = {"w_up": ("d", "ff"), "w_down": ("ff", "d")}
+    if cfg.activation in GATED:
+        a["w_gate"] = ("d", "ff")
+    return a
+
+
+_ACT = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "swiglu": jax.nn.silu,
+    "geglu": jax.nn.gelu,
+    "gelu_glu": jax.nn.gelu,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+}
+
+
+def apply_mlp(cfg, p, x):
+    dt = x.dtype
+    h = qdense(x, p["w_up"])
+    if "w_gate" in p:
+        h = _ACT[cfg.activation](qdense(x, p["w_gate"])) * h
+    else:
+        h = _ACT[cfg.activation](h)
+    h = sl.shard(h, "batch", "seq", "ff")
+    return sl.shard(qdense(h, p["w_down"]), "batch", "seq_sp", None)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(cfg, key):
+    p = {"tok": embed_init(key, (cfg.vocab, cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab))
+    return p
+
+
+def embed_axes(cfg):
+    a = {"tok": ("vocab", "d")}
+    if not cfg.tie_embeddings:
+        a["head"] = ("d", "vocab")
+    return a
+
+
+def embed_tokens(cfg, p, tokens):
+    tok = p["tok"]
+    if isinstance(tok, dict):  # int8-quantized table: dequant the gathered rows
+        x = jnp.take(tok["q"], tokens, axis=0).astype(_cdtype(cfg))
+        x = x * tok["s"].astype(x.dtype)
+    else:
+        x = jnp.take(tok, tokens, axis=0).astype(_cdtype(cfg))
+    if getattr(cfg, "scale_embed", False):
+        x = x * math.sqrt(cfg.d_model)  # gemma convention
+    return sl.shard(x, "batch", "seq_sp", None)
+
+
+def unembed(cfg, p, x):
+    dt = x.dtype
+    if "head" in p:
+        logits = qdense(x, p["head"])
+    else:
+        tok = p["tok"]
+        if isinstance(tok, dict):
+            # (q * s[None,:]).T == scale x by s, then contract with q.T
+            logits = jax.lax.dot_general(
+                x * tok["s"].astype(dt), tok["q"].astype(dt),
+                (((x.ndim - 1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).astype(dt)
+        else:
+            logits = x @ tok.T.astype(dt)
+    if cfg.logit_softcap > 0.0:
+        logits = _softcap(logits.astype(jnp.float32), cfg.logit_softcap).astype(dt)
+    return sl.shard(logits, "batch", "seq", "vocab")
+
+
+def _cdtype(cfg):
+    return jnp.dtype(cfg.compute_dtype)

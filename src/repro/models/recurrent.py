@@ -1,0 +1,105 @@
+"""RG-LRU recurrence block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The temporal-mixing block of the ``rec`` layer kind: two parallel branches
+(gate branch with GeLU, main branch with causal conv + RG-LRU), merged
+multiplicatively and projected back to d_model.
+
+The linear recurrence  h_t = a_t * h_{t-1} + b_t  is evaluated with
+``jax.lax.associative_scan`` for training/prefill (O(log S) depth, fully
+parallel — the TPU-friendly formulation) and as a single fused step for
+decode.  State is (B, W) — O(1) in sequence length, which is what makes the
+``long_500k`` cell tractable for this family.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shardlib as sl
+from repro.models import layers as L
+from repro.models.ssm import _causal_conv
+
+_C = 8.0  # Griffin's recurrence sharpness constant
+
+
+def init_rglru(cfg, key):
+    d = cfg.d_model
+    w = cfg.lru_dim or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = exp(-c*softplus(L)) is in (0.9, 0.999)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log(u)/c)
+    return {
+        "w_x": L.dense_init(ks[1], (d, w)),
+        "w_gate": L.dense_init(ks[2], (d, w)),
+        "conv": jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32) * 0.1,
+        "lam": lam,
+        "w_rgate": jax.random.normal(ks[4], (w,), jnp.float32) * 0.5,
+        "b_rgate": jnp.zeros((w,), jnp.float32),
+        "w_igate": jax.random.normal(ks[5], (w,), jnp.float32) * 0.5,
+        "b_igate": jnp.zeros((w,), jnp.float32),
+        "w_out": L.dense_init(jax.random.fold_in(key, 9), (w, d)),
+    }
+
+
+def rglru_axes():
+    return {
+        "w_x": ("d", "ff"), "w_gate": ("d", "ff"), "conv": (None, "ff"),
+        "lam": ("ff",), "w_rgate": ("ff",), "b_rgate": ("ff",),
+        "w_igate": ("ff",), "b_igate": ("ff",), "w_out": ("ff", "d"),
+    }
+
+
+def init_rglru_state(cfg, batch: int, dtype=jnp.float32):
+    w = cfg.lru_dim or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_state_axes():
+    return {"h": ("batch", "ff"), "conv": ("batch", None, "ff")}
+
+
+def apply_rglru(cfg, p, x: jax.Array, state=None):
+    """x: (B, S, d) -> (y, new_state)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    state = state or init_rglru_state(cfg, B, dt)
+
+    gate = jax.nn.gelu(L.qdense(x, p["w_gate"]))  # (B, S, w)
+    u = L.qdense(x, p["w_x"])
+    u, conv_state = _causal_conv(u, p["conv"], state["conv"])
+    uf = u.astype(jnp.float32)
+
+    # input-dependent diagonal gates (Griffin's block-diagonal, diagonalized)
+    r = jax.nn.sigmoid(uf * p["w_rgate"] + p["b_rgate"])
+    i = jax.nn.sigmoid(uf * p["w_igate"] + p["b_igate"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r  # (B, S, w), <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via log1p(-exp(2 log a))
+    beta = jnp.exp(0.5 * jnp.log1p(-jnp.exp(jnp.minimum(2.0 * log_a, -1e-6))))
+    b = beta * (i * uf)
+
+    if S == 1:
+        h = a[:, 0] * state["h"] + b[:, 0]
+        hs = h[:, None]
+    else:
+        # associative scan over time: (a, b) o (a', b') = (a*a', a'*b + b')
+        def op(x1, x2):
+            a1, b1 = x1
+            a2, b2 = x2
+            return a1 * a2, a2 * b1 + b2
+
+        a0 = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b0 = jnp.concatenate([state["h"][:, None], b], axis=1)
+        _, hs_all = jax.lax.associative_scan(op, (a0, b0), axis=1)
+        hs = hs_all[:, 1:]
+        h = hs[:, -1]
+
+    y = L.qdense(hs.astype(dt) * gate, p["w_out"])
+    return sl.shard(y, "batch", "seq_sp", None), {"h": h, "conv": conv_state}

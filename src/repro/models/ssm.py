@@ -1,0 +1,303 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory with exponential gating).
+
+Both are implemented as sequence-to-sequence blocks with an explicit
+recurrent state, so the same code serves training (scan over time),
+prefill (scan, keep final state) and decode (one step).  State size is
+O(1) in sequence length — these are the archs that make the ``long_500k``
+cell meaningful.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shardlib as sl
+from repro.models import layers as L
+
+# ---------------------------------------------------------------------------
+# mLSTM: per-head matrix memory C (hd x hd), exponential i/f gates
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(cfg, key):
+    d = cfg.d_model
+    up = 2 * d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_u": L.dense_init(ks[0], (d, up)),
+        "w_z": L.dense_init(ks[1], (d, up)),
+        "conv": jax.random.normal(ks[2], (cfg.conv_width, up), jnp.float32) * 0.1,
+        "s_q": jnp.ones((up,), jnp.float32),
+        "s_k": jnp.ones((up,), jnp.float32),
+        "s_v": jnp.ones((up,), jnp.float32),
+        "w_if": L.dense_init(ks[3], (d, 2 * cfg.n_heads)),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((cfg.n_heads,)), jnp.ones((cfg.n_heads,)) * 3.0]
+        ),  # forget-gate bias init: remember by default
+        "w_down": L.dense_init(ks[4], (up, d)),
+    }
+
+
+def mlstm_axes(cfg):
+    return {
+        "w_u": ("d", "ff"), "w_z": ("d", "ff"), "conv": (None, "ff"),
+        "s_q": ("ff",), "s_k": ("ff",), "s_v": ("ff",),
+        "w_if": ("d", None), "b_if": (None,), "w_down": ("ff", "d"),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, state: jax.Array | None):
+    """u: (B, S, F); w: (W, F) depthwise causal conv.  state: (B, W-1, F)
+    carries the last W-1 inputs for decode continuity.  Returns (y, new_state).
+    """
+    B, S, F = u.shape
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, W - 1, F), u.dtype)
+    full = jnp.concatenate([state.astype(u.dtype), u], axis=1)  # (B, S+W-1, F)
+    y = sum(full[:, i : i + S] * w[i].astype(u.dtype) for i in range(W))
+    return y, full[:, -(W - 1):]
+
+
+def init_mlstm_state(cfg, batch: int, dtype=jnp.float32):
+    up = 2 * cfg.d_model
+    H = cfg.n_heads
+    hd = up // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, up), dtype),
+    }
+
+
+def mlstm_state_axes():
+    return {"C": ("batch", "heads", None, None), "n": ("batch", "heads", None),
+            "m": ("batch", "heads"), "conv": ("batch", None, "ff")}
+
+
+def apply_mlstm(cfg, p, x: jax.Array, state=None, chunk: int = 64):
+    """x: (B, S, d) -> (y, new_state).  Stabilized exponential gating.
+
+    S == 1 (decode) runs the exact sequential recurrence; longer sequences
+    use the CHUNKWISE-PARALLEL form (`_mlstm_chunkwise`): the per-timestep
+    (hd x hd) matrix-memory update is the reason the recurrent form burns
+    ~100x the model FLOPs (measured useful-flops ratio 0.01 on the
+    train_4k dry-run); chunking turns it into L x L attention tiles plus
+    one state update per chunk — all MXU matmuls.
+    """
+    B, S, d = x.shape
+    up = 2 * d
+    H = cfg.n_heads
+    hd = up // H
+    dt = x.dtype
+    state = state or init_mlstm_state(cfg, B, dt)
+
+    u = L.qdense(x, p["w_u"])
+    z = L.qdense(x, p["w_z"])
+    uc, conv_state = _causal_conv(u, p["conv"], state["conv"])
+    uc = jax.nn.silu(uc)
+    q = (uc * p["s_q"].astype(dt)).reshape(B, S, H, hd)
+    k = (uc * p["s_k"].astype(dt)).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = (u * p["s_v"].astype(dt)).reshape(B, S, H, hd)
+    gates = L.qdense(x, p["w_if"]) + p["b_if"].astype(dt)
+    i_raw, f_raw = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (B, S, H)
+
+    if S > 1 and not os.environ.get("REPRO_MLSTM_SEQUENTIAL"):
+        h, C, n, m = _mlstm_chunkwise(
+            q, k, v, i_raw, f_raw,
+            state["C"], state["n"], state["m"], chunk=min(chunk, S),
+        )
+        y = L.qdense(h.astype(dt) * jax.nn.silu(z), p["w_down"])
+        new_state = {"C": C, "n": n, "m": m, "conv": conv_state}
+        return sl.shard(y, "batch", "seq_sp", None), new_state
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = inp  # (B,H,hd)x3, (B,H)x2
+        logf = -jax.nn.softplus(-f_t)  # log sigmoid(f)
+        m_new = jnp.maximum(logf + m, i_t)
+        fg = jnp.exp(logf + m - m_new)
+        ig = jnp.exp(i_t - m_new)
+        C_new = fg[..., None, None] * C + ig[..., None, None] * (
+            v_t[..., :, None] * k_t[..., None, :]
+        )
+        n_new = fg[..., None] * n + ig[..., None] * k_t
+        h_num = jnp.einsum("bhvk,bhk->bhv", C_new, q_t)
+        h_den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q_t)), 1.0)
+        h = h_num / h_den[..., None]
+        return (C_new, n_new, m_new), h
+
+    xs = (
+        q.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        i_raw.transpose(1, 0, 2),
+        f_raw.transpose(1, 0, 2),
+    )
+    (C, n, m), hs = jax.lax.scan(step, (state["C"], state["n"], state["m"]), xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, up).astype(dt)
+    y = L.qdense(h * jax.nn.silu(z), p["w_down"])
+    new_state = {"C": C, "n": n, "m": m, "conv": conv_state}
+    return sl.shard(y, "batch", "seq_sp", None), new_state
+
+
+def _mlstm_chunkwise(q, k, v, i_raw, f_raw, C0, n0, m0, chunk: int):
+    """Chunkwise-parallel mLSTM, numerically equal to the sequential scan.
+
+    Derivation: with F_t = sum_{tau<=t} log sigmoid(f_tau) (per chunk) and
+    u_tau = i_tau - F_tau, the sequential stabilizer satisfies
+    m_t = F_t + M_t with M_t = max(m_0, cummax u).  F_t then cancels in the
+    normalized output, leaving
+
+      num_t = e^{m0 - M_t} C0 q_t + sum_{tau<=t} e^{u_tau - M_t}(q_t.k_tau) v_tau
+      den_t = e^{m0 - M_t} (n0.q_t) + sum_{tau<=t} e^{u_tau - M_t}(q_t.k_tau)
+      h_t   = num_t / max(|den_t|, 1)
+
+    and the carried state updates once per chunk with the same weights at
+    t = L.  Everything inside a chunk is (L x L) / (L x hd) matmuls.
+
+    Shapes: q/k/v (B,S,H,hd); i/f (B,S,H); C0 (B,H,hd,hd); n0 (B,H,hd);
+    m0 (B,H).  Returns (h (B,S,H*hd) fp32, C, n, m).
+    """
+    B, S, H, hd = q.shape
+    Lc = chunk
+    pad = (-S) % Lc
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded tokens: i = -inf (weight 0), f -> logf = 0 (no decay)
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        f_raw = jnp.pad(f_raw, ((0, 0), (0, pad), (0, 0)), constant_values=1e30)
+    nC = q.shape[1] // Lc
+
+    def to_chunks(x):  # (B, S, H, ...) -> (nC, B, H, Lc, ...)
+        x = x.reshape((B, nC, Lc) + x.shape[2:])
+        perm = (1, 0, 3, 2) + tuple(range(4, x.ndim))
+        return x.transpose(perm)
+
+    qc = to_chunks(q).astype(jnp.float32)
+    kc = to_chunks(k).astype(jnp.float32)
+    vc = to_chunks(v).astype(jnp.float32)
+    ic = to_chunks(i_raw[..., None])[..., 0]  # (nC, B, H, Lc)
+    fc = to_chunks(f_raw[..., None])[..., 0]
+
+    causal = jnp.tril(jnp.ones((Lc, Lc), bool))
+
+    def chunk_step(carry, xs):
+        C, n, m = carry  # (B,H,hd,hd), (B,H,hd), (B,H)
+        qi, ki, vi, ii, fi = xs
+        logf = -jax.nn.softplus(-fi)  # (B,H,Lc)
+        F = jnp.cumsum(logf, axis=-1)
+        u = ii - F  # (B,H,Lc)
+        M = jnp.maximum(m[..., None], jax.lax.cummax(u, axis=2))  # (B,H,Lc)
+        w_mem = jnp.exp(m[..., None] - M)  # (B,H,Lc)
+        D = jnp.exp(u[..., None, :] - M[..., :, None])  # (B,H,Lc_t,Lc_tau)
+        D = jnp.where(causal[None, None], D, 0.0)
+        s = jnp.einsum("bhtd,bhsd->bhts", qi, ki) * D  # masked scores
+        intra = jnp.einsum("bhts,bhsv->bhtv", s, vi)
+        inter = jnp.einsum("bhvk,bhtk->bhtv", C, qi) * w_mem[..., None]
+        den = (
+            jnp.einsum("bhk,bhtk->bht", n, qi) * w_mem + s.sum(-1)
+        )
+        h = (inter + intra) / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # end-of-chunk state
+        ML = jnp.maximum(m, u.max(-1))  # (B,H)
+        wL_mem = jnp.exp(m - ML)
+        wL = jnp.exp(u - ML[..., None])  # (B,H,Lc)
+        C_new = wL_mem[..., None, None] * C + jnp.einsum(
+            "bhs,bhsv,bhsk->bhvk", wL, vi, ki
+        )
+        n_new = wL_mem[..., None] * n + jnp.einsum("bhs,bhsk->bhk", wL, ki)
+        m_new = F[..., -1] + ML
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(
+        chunk_step, (C0, n0, m0), (qc, kc, vc, ic, fc)
+    )
+    # hs: (nC, B, H, Lc, hd) -> (B, S, H*hd)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, nC * Lc, H * hd)[:, :S]
+    return h, C, n, m
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory per unit, exponential gating, per-head recurrence
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(cfg, key):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 4)
+    f_up = max(8, int(round(d * 4 / 3)))
+    return {
+        "w_gates": L.dense_init(ks[0], (d, 4 * d)),  # i, f, z, o
+        "r_gates": jax.random.normal(ks[1], (4, H, hd, hd), jnp.float32)
+        / math.sqrt(hd),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.ones((d,)) * 3.0, jnp.zeros((2 * d,))]
+        ),
+        "w_up": L.dense_init(ks[2], (d, 2 * f_up)),
+        "w_down": L.dense_init(ks[3], (f_up, d)),
+    }
+
+
+def slstm_axes(cfg):
+    return {
+        "w_gates": ("d", "qkv"), "r_gates": (None, "heads", None, None),
+        "b_gates": (None,), "w_up": ("d", "ff"), "w_down": ("ff", "d"),
+    }
+
+
+def init_slstm_state(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_state_axes():
+    return {"c": ("batch", None), "n": ("batch", None), "h": ("batch", None),
+            "m": ("batch", None)}
+
+
+def apply_slstm(cfg, p, x: jax.Array, state=None):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    dt = x.dtype
+    state = state or init_slstm_state(cfg, B, dt)
+    gates_x = (L.qdense(x, p["w_gates"]) + p["b_gates"].astype(dt)).astype(jnp.float32)
+
+    def step(carry, gx_t):
+        c, n, h, m = carry
+        hh = h.reshape(B, H, hd)
+        rec = jnp.einsum("ghij,bhj->gbhi", p["r_gates"], hh).reshape(4, B, d)
+        gi, gf, gz, go = jnp.split(gx_t, 4, axis=-1)
+        gi, gf, gz, go = gi + rec[0], gf + rec[1], gz + rec[2], go + rec[3]
+        logf = -jax.nn.softplus(-gf)
+        m_new = jnp.maximum(logf + m, gi)
+        fg = jnp.exp(logf + m - m_new)
+        ig = jnp.exp(gi - m_new)
+        c_new = fg * c + ig * jnp.tanh(gz)
+        n_new = fg * n + ig
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    (c, n, h, m), hs = jax.lax.scan(
+        step, (state["c"], state["n"], state["h"], state["m"]),
+        gates_x.transpose(1, 0, 2),
+    )
+    y = hs.transpose(1, 0, 2).astype(dt)
+    # post up/down projection (gated, factor 4/3)
+    u = L.qdense(y, p["w_up"])
+    a, b = jnp.split(u, 2, axis=-1)
+    y = L.qdense(jax.nn.gelu(a) * b, p["w_down"])
+    new_state = {"c": c, "n": n, "h": h, "m": m}
+    return sl.shard(y, "batch", "seq_sp", None), new_state

@@ -1,0 +1,421 @@
+"""Decoder-only LM over heterogeneous layer kinds, with unit-scan compile
+discipline.
+
+A model is a sequence of layer *kinds* (``cfg.layer_kinds``): ``global`` /
+``local`` attention layers (with dense-MLP or MoE FFN), ``rec`` (RG-LRU)
+blocks, ``mlstm`` / ``slstm`` xLSTM blocks.  The kind sequence is factored
+into its smallest repeating *unit*; parameters for each unit position are
+stacked across units and the forward pass is a single ``jax.lax.scan`` over
+units (plus an unrolled remainder).  HLO size is therefore O(unit), not
+O(depth) — the compile-time discipline that keeps 512-device lowering cheap
+even for 40-layer models.
+
+Three execution modes share one layer implementation:
+  - ``train``:   full-sequence, no cache, returns MoE aux losses;
+  - ``prefill``: full-sequence, writes the KV cache / recurrent states;
+  - ``decode``:  one token per sequence against the cache (ring-buffer
+                 semantics for sliding-window layers).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shardlib as sl
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.models import ssm as S
+
+ATTN_KINDS = ("global", "local")
+
+
+# ---------------------------------------------------------------------------
+# unit factorization
+# ---------------------------------------------------------------------------
+
+
+def find_unit(kinds: tuple) -> tuple:
+    """Factor a kind sequence into (unit, n_units, remainder): the prefix is
+    n_units repetitions of `unit`, the tail is `remainder`.  Picks the period
+    with maximal scanned coverage (ties -> shortest unit)."""
+    Ln = len(kinds)
+
+    def cost(unit, rem):
+        # distinct layer bodies in the HLO: unit positions + remainder runs
+        return len(unit) + len(rem_runs(rem))
+
+    best = (kinds, 1, ())  # fallback: whole thing is one unit
+    best_cost = cost(kinds, ())
+    for p in range(1, min(Ln, 12) + 1):
+        unit = kinds[:p]
+        k = 0
+        while (k + 1) * p <= Ln and kinds[k * p : (k + 1) * p] == unit:
+            k += 1
+        if k < 1:
+            continue
+        rem = kinds[p * k:]
+        c = cost(unit, rem)
+        if c < best_cost or (c == best_cost and p * k > len(best[0]) * best[1]):
+            best = (unit, k, rem)
+            best_cost = c
+    return best
+
+
+def rem_runs(rem: tuple) -> list:
+    """Group the remainder into (kind, count) runs — each run is scanned so
+    the remainder, too, costs O(1) HLO (gemma3's 4-local tail would
+    otherwise unroll four flash-attention bodies)."""
+    runs = []
+    for kind in rem:
+        if runs and runs[-1][0] == kind:
+            runs[-1][1] += 1
+        else:
+            runs.append([kind, 1])
+    return [(k, c) for k, c in runs]
+
+
+# ---------------------------------------------------------------------------
+# one layer (by kind)
+# ---------------------------------------------------------------------------
+
+
+def init_layer(cfg, kind: str, key):
+    ks = jax.random.split(key, 4)
+    if kind in ATTN_KINDS:
+        p = {
+            "ln1": L.init_norm(cfg.d_model, cfg.norm),
+            "attn": L.init_attn(cfg, ks[0]),
+            "ln2": L.init_norm(cfg.d_model, cfg.norm),
+        }
+        if cfg.moe is not None:
+            p["moe"] = M.init_moe(cfg, ks[1])
+        else:
+            p["mlp"] = L.init_mlp(cfg, ks[1])
+        return p
+    if kind == "rec":
+        return {
+            "ln1": L.init_norm(cfg.d_model, cfg.norm),
+            "rec": R.init_rglru(cfg, ks[0]),
+            "ln2": L.init_norm(cfg.d_model, cfg.norm),
+            "mlp": L.init_mlp(cfg, ks[1]),
+        }
+    if kind == "mlstm":
+        return {"ln": L.init_norm(cfg.d_model, cfg.norm), "cell": S.init_mlstm(cfg, ks[0])}
+    if kind == "slstm":
+        return {"ln": L.init_norm(cfg.d_model, cfg.norm), "cell": S.init_slstm(cfg, ks[0])}
+    raise ValueError(kind)
+
+
+def layer_axes(cfg, kind: str):
+    na = L.norm_axes(cfg.norm)
+    if kind in ATTN_KINDS:
+        a = {"ln1": na, "attn": L.attn_axes(), "ln2": na}
+        if cfg.moe is not None:
+            a["moe"] = M.moe_axes(cfg)
+        else:
+            a["mlp"] = L.mlp_axes(cfg)
+        return a
+    if kind == "rec":
+        return {"ln1": na, "rec": R.rglru_axes(), "ln2": na, "mlp": L.mlp_axes(cfg)}
+    if kind == "mlstm":
+        return {"ln": na, "cell": S.mlstm_axes(cfg)}
+    if kind == "slstm":
+        return {"ln": na, "cell": S.slstm_axes(cfg)}
+    raise ValueError(kind)
+
+
+def init_layer_cache(cfg, kind: str, batch: int, length: int, dtype=jnp.bfloat16):
+    if kind in ATTN_KINDS:
+        ln = min(length, cfg.local_window) if kind == "local" else length
+        return L.init_attn_cache(cfg, batch, ln, dtype)
+    if kind == "rec":
+        return R.init_rglru_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return S.init_mlstm_state(cfg, batch, dtype)
+    if kind == "slstm":
+        return S.init_slstm_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def layer_cache_axes(kind: str):
+    if kind in ATTN_KINDS:
+        return L.attn_cache_axes()
+    if kind == "rec":
+        return R.rglru_state_axes()
+    if kind == "mlstm":
+        return S.mlstm_state_axes()
+    if kind == "slstm":
+        return S.slstm_state_axes()
+    raise ValueError(kind)
+
+
+def apply_layer(cfg, kind: str, p, x, *, mode: str, cache=None, pos=None):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ATTN_KINDS:
+        base = (
+            cfg.rope_base_global
+            if (kind == "global" and cfg.rope_base_global) else cfg.rope_base
+        )
+        h = L.apply_norm(p["ln1"], x, cfg.norm)
+        # sequence-parallel boundary: blocks consume seq-replicated
+        # activations (one all-gather here when seq_sp -> model) and emit
+        # seq-sharded ones (reduce-scatter at the block-output constraint).
+        # Without the explicit pin, GSPMD runs the chunked flash attention
+        # on seq-sharded operands and falls into involuntary full
+        # rematerialization (measured 2x regression on qwen2-moe).
+        h = sl.shard_pinned(h, "batch", "seq", None)
+        if mode == "decode":
+            a, cache_a = L.apply_attn(
+                cfg, p["attn"], h, kind=kind, rope_base=base, cache=cache, pos=pos
+            )
+        elif mode == "prefill":
+            a, cache_a = _attn_prefill(cfg, p["attn"], h, kind, base, cache)
+        else:
+            a, cache_a = L.apply_attn(cfg, p["attn"], h, kind=kind, rope_base=base)
+        x = x + a
+        h = L.apply_norm(p["ln2"], x, cfg.norm)
+        h = sl.shard_pinned(h, "batch", "seq", None)
+        if cfg.moe is not None:
+            if mode == "train":
+                f, aux = M.apply_moe(cfg, p["moe"], h, return_aux=True)
+            else:
+                f = M.apply_moe(cfg, p["moe"], h)
+        else:
+            f = L.apply_mlp(cfg, p["mlp"], h)
+        return x + f, cache_a, aux
+    if kind == "rec":
+        h = L.apply_norm(p["ln1"], x, cfg.norm)
+        y, new_state = R.apply_rglru(cfg, p["rec"], h, cache)
+        x = x + y
+        h = L.apply_norm(p["ln2"], x, cfg.norm)
+        return x + L.apply_mlp(cfg, p["mlp"], h), new_state, aux
+    if kind == "mlstm":
+        h = L.apply_norm(p["ln"], x, cfg.norm)
+        y, new_state = S.apply_mlstm(cfg, p["cell"], h, cache)
+        return x + y, new_state, aux
+    if kind == "slstm":
+        h = L.apply_norm(p["ln"], x, cfg.norm)
+        y, new_state = S.apply_slstm(cfg, p["cell"], h, cache)
+        return x + y, new_state, aux
+    raise ValueError(kind)
+
+
+def _attn_prefill(cfg, p, h, kind, base, cache):
+    """Full-sequence attention that also fills the KV cache.
+
+    For a ``local`` layer the cache is a ring buffer of window length; the
+    last `window` positions land in their pos % window slots.
+    """
+    B, Sq, _ = h.shape
+    window = cfg.local_window if kind == "local" else None
+    dt = h.dtype
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = L.qdense(h, p["wq"]).reshape(B, Sq, H, hd)
+    k = L.qdense(h, p["wk"]).reshape(B, Sq, KVH, hd)
+    v = L.qdense(h, p["wv"]).reshape(B, Sq, KVH, hd)
+    positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    q = L.apply_rope(q, positions, base)
+    k = L.apply_rope(k, positions, base)
+    o = L.attention(q, k, v, causal=True, window=window, softcap=cfg.logit_softcap)
+    out = L.qdense(o.reshape(B, Sq, H * hd), p["wo"])
+    Sc = cache["k"].shape[1]
+    if Sc >= Sq:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, 1)
+    else:
+        # ring buffer: keep the last Sc positions, rolled so slot = pos % Sc
+        kc = jnp.roll(k[:, -Sc:], Sq % Sc, axis=1).astype(cache["k"].dtype)
+        vc = jnp.roll(v[:, -Sc:], Sq % Sc, axis=1).astype(cache["v"].dtype)
+    kc = sl.shard_pinned(kc, "batch", "cache_seq", "kv_heads", None)
+    vc = sl.shard_pinned(vc, "batch", "cache_seq", "kv_heads", None)
+    return sl.shard(out, "batch", "seq_sp", None), {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# whole model
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg, key):
+    kinds = cfg.layer_kinds
+    unit, n_units, rem = find_unit(kinds)
+    k_embed, k_layers, k_rem = jax.random.split(key, 3)
+    params = {
+        "embed": L.init_embed(cfg, k_embed),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm),
+        "unit": [],
+        "rem": [],
+    }
+    for pi, kind in enumerate(unit):
+        keys = jax.random.split(jax.random.fold_in(k_layers, pi), n_units)
+        params["unit"].append(jax.vmap(lambda k: init_layer(cfg, kind, k))(keys))
+    for ri, (kind, count) in enumerate(rem_runs(rem)):
+        keys = jax.random.split(jax.random.fold_in(k_rem, ri), count)
+        params["rem"].append(jax.vmap(lambda k: init_layer(cfg, kind, k))(keys))
+    return params
+
+
+def param_axes(cfg):
+    """Pytree of logical-axis tuples matching init_params.  Stacked unit
+    params get a leading None (the unit axis is never sharded)."""
+    unit, n_units, rem = find_unit(cfg.layer_kinds)
+
+    def stack_axes(tree):
+        return jax.tree.map(lambda ax: (None,) + tuple(ax), tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    return {
+        "embed": L.embed_axes(cfg),
+        "final_norm": L.norm_axes(cfg.norm),
+        "unit": [stack_axes(layer_axes(cfg, k)) for k in unit],
+        "rem": [stack_axes(layer_axes(cfg, k)) for k, _ in rem_runs(rem)],
+    }
+
+
+def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16):
+    unit, n_units, rem = find_unit(cfg.layer_kinds)
+    cache = {"unit": [], "rem": []}
+    for kind in unit:
+        one = init_layer_cache(cfg, kind, batch, length, dtype)
+        cache["unit"].append(
+            jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_units,) + x.shape), one)
+        )
+    for kind, count in rem_runs(rem):
+        one = init_layer_cache(cfg, kind, batch, length, dtype)
+        cache["rem"].append(
+            jax.tree.map(lambda x: jnp.broadcast_to(x[None], (count,) + x.shape), one)
+        )
+    return cache
+
+
+def cache_axes(cfg):
+    unit, n_units, rem = find_unit(cfg.layer_kinds)
+
+    def stack_axes(tree):
+        return jax.tree.map(lambda ax: (None,) + tuple(ax), tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    return {
+        "unit": [stack_axes(layer_cache_axes(k)) for k in unit],
+        "rem": [stack_axes(layer_cache_axes(k)) for k, _ in rem_runs(rem)],
+    }
+
+
+def _run_layers(cfg, params, x, *, mode: str, cache=None, pos=None):
+    """Scan the unit stack, then the remainder.  Returns (x, new_cache, aux)."""
+    unit, n_units, rem = find_unit(cfg.layer_kinds)
+
+    remat = mode == "train" and getattr(cfg, "remat", False)
+
+    def one_layer(kind, p, x):
+        return apply_layer(cfg, kind, p, x, mode=mode, cache=None, pos=None)
+
+    def unit_body(carry, xs):
+        x, aux = carry
+        layer_ps, layer_cs = xs
+        new_cs = []
+        for pi, kind in enumerate(unit):
+            c = layer_cs[pi] if layer_cs is not None else None
+            if remat:
+                x, nc, a = jax.checkpoint(
+                    functools.partial(one_layer, kind), static_argnums=()
+                )(layer_ps[pi], x)
+            else:
+                x, nc, a = apply_layer(cfg, kind, layer_ps[pi], x, mode=mode, cache=c, pos=pos)
+            new_cs.append(nc)
+            aux = aux + a
+        return (x, aux), tuple(new_cs) if cache is not None else None
+
+    xs = (params["unit"], tuple(cache["unit"]) if cache is not None else None)
+    (x, aux), unit_caches = jax.lax.scan(
+        unit_body, (x, jnp.zeros((), jnp.float32)), xs
+    )
+    rem_caches = []
+    for ri, (kind, count) in enumerate(rem_runs(rem)):
+        def run_body(carry, xs_r, kind=kind):
+            x, aux = carry
+            p_r, c_r = xs_r
+            if remat:
+                x, nc, a = jax.checkpoint(functools.partial(one_layer, kind))(p_r, x)
+            else:
+                x, nc, a = apply_layer(cfg, kind, p_r, x, mode=mode, cache=c_r, pos=pos)
+            return (x, aux + a), nc
+
+        xs_r = (params["rem"][ri], cache["rem"][ri] if cache is not None else None)
+        (x, aux), nc = jax.lax.scan(run_body, (x, aux), xs_r)
+        rem_caches.append(nc)
+    new_cache = (
+        {"unit": list(unit_caches), "rem": rem_caches} if cache is not None else None
+    )
+    return x, new_cache, aux
+
+
+def forward(cfg, params, tokens, extra_embeds: Optional[jax.Array] = None):
+    """Training/eval forward: logits over the full sequence.
+
+    extra_embeds: (B, P, d) precomputed frontend embeddings (VLM patches),
+    prepended to the token embeddings.
+    """
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        x = sl.shard(x, "batch", "seq_sp", None)
+    x, _, aux = _run_layers(cfg, params, x, mode="train")
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(cfg, params["embed"], x)
+    if extra_embeds is not None:
+        logits = logits[:, extra_embeds.shape[1]:]
+    return logits, aux
+
+
+def prefill(cfg, params, tokens, cache, extra_embeds: Optional[jax.Array] = None):
+    """Serving prefill: returns (last-position logits, filled cache)."""
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    x, cache, _ = _run_layers(cfg, params, x, mode="prefill", cache=cache)
+    x = L.apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+    logits = L.unembed(cfg, params["embed"], x)
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    """One decode step.  tokens: (B, 1) int32; pos: (B,) absolute positions."""
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    x, cache, _ = _run_layers(cfg, params, x, mode="decode", cache=cache, pos=pos)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(cfg, params["embed"], x)
+    return logits, cache
+
+
+def loss_fn(cfg, params, batch, extra_embeds=None):
+    """Next-token cross entropy.  batch: {"tokens": (B,S), "labels": (B,S)}
+    labels < 0 are masked out."""
+    logits, aux = forward(cfg, params, batch["tokens"], extra_embeds)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    # Fusion-friendly NLL: never materializes a second (B, S, V) buffer —
+    # both the logsumexp and the label pick are reductions XLA fuses with
+    # the dtype converts, which matters at vocab=262k with sharded logits.
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    V = logits.shape[-1]
+    label_logit = jnp.sum(
+        jnp.where(jnp.arange(V)[None, None, :] == lab[..., None], lf, 0.0), axis=-1
+    )
+    nll = lse - label_logit
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux, {"loss": loss, "aux": aux}
+
+
+def n_params_exact(cfg) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    shapes = jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
+    return int(sum(x.size for x in jax.tree.leaves(shapes)))

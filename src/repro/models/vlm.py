@@ -1,0 +1,66 @@
+"""InternVL2-style VLM (arXiv:2404.16821): ViT frontend stub + LM backbone.
+
+Per the assignment, the vision frontend is a STUB — ``input_specs`` provides
+precomputed patch embeddings (B, n_patches, d_model).  The language model is
+the InternLM2 backbone (standard GQA decoder), reused verbatim from
+``models.transformer``; this module only handles the multimodal splice: a
+learned projector on the patch embeddings, prepended to the token sequence.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def init_params(cfg, key):
+    k_lm, k_proj = jax.random.split(key)
+    p = T.init_params(cfg, k_lm)
+    p["proj"] = {
+        "w": L.dense_init(k_proj, (cfg.d_model, cfg.d_model)),
+        "ln": L.init_norm(cfg.d_model, cfg.norm),
+    }
+    return p
+
+
+def param_axes(cfg):
+    a = T.param_axes(cfg)
+    a["proj"] = {"w": ("d", "d"), "ln": L.norm_axes(cfg.norm)}
+    return a
+
+
+def _project(cfg, params, patches):
+    x = L.apply_norm(params["proj"]["ln"], patches.astype(jnp.dtype(cfg.compute_dtype)), cfg.norm)
+    return L.qdense(x, params["proj"]["w"])
+
+
+def forward(cfg, params, tokens, patches):
+    """tokens (B, S_text), patches (B, P, d) -> logits over text positions."""
+    return T.forward(cfg, params, tokens, extra_embeds=_project(cfg, params, patches))
+
+
+def loss_fn(cfg, params, batch):
+    return T.loss_fn(
+        cfg, params,
+        {"tokens": batch["tokens"], "labels": batch["labels"]},
+        extra_embeds=_project(cfg, params, batch["patches"]),
+    )
+
+
+init_cache = T.init_cache
+cache_axes = T.cache_axes
+decode_step = T.decode_step
+
+
+def prefill(cfg, params, tokens, patches, cache):
+    return T.prefill(cfg, params, tokens, cache, extra_embeds=_project(cfg, params, patches))
+
+
+def n_params_exact(cfg) -> int:
+    shapes = jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
+    return int(sum(x.size for x in jax.tree.leaves(shapes)))

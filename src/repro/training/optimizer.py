@@ -1,0 +1,111 @@
+"""Optimizers from scratch (no optax): AdamW and momentum-SGD, as pure
+pytree transforms.  Optimizer state mirrors the parameter pytree, so the
+launcher shards it with the *same* logical-axis rules as the parameters —
+combined with the (pod, data) "zero" rule this is ZeRO-1-style state
+sharding without any optimizer-specific code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"  # adamw | sgd
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    momentum: float = 0.9  # sgd
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.decay_steps - cfg.warmup_steps), 0.0, 1.0
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(cfg: OptimizerConfig, params, error_feedback: bool = False) -> dict:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    state = {"step": jnp.zeros((), jnp.int32)}
+    if cfg.name == "adamw":
+        state["mu"] = zeros()
+        state["nu"] = zeros()
+    elif cfg.name == "sgd":
+        state["mom"] = zeros()
+    else:
+        raise ValueError(cfg.name)
+    if error_feedback:  # gradient-compression residual buffer
+        state["ef"] = zeros()
+    return state
+
+
+def opt_state_axes(cfg: OptimizerConfig, param_axes, error_feedback: bool = False) -> dict:
+    axes = {"step": ()}
+    if cfg.name == "adamw":
+        axes["mu"] = param_axes
+        axes["nu"] = param_axes
+    else:
+        axes["mom"] = param_axes
+    if error_feedback:
+        axes["ef"] = param_axes
+    return axes
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, state) -> tuple:
+    """One optimizer step.  Returns (new_params, new_state, metrics)."""
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state["step"]
+    lr = lr_schedule(cfg, step)
+    if cfg.name == "adamw":
+        b1, b2 = cfg.beta1, cfg.beta2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
+        c1 = 1.0 - b1 ** (step.astype(jnp.float32) + 1.0)
+        c2 = 1.0 - b2 ** (step.astype(jnp.float32) + 1.0)
+
+        def upd(p, m, v):
+            mhat = m / c1
+            vhat = v / c2
+            u = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                u = u + cfg.weight_decay * p
+            return (p - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        new_state = dict(state, step=step + 1, mu=mu, nu=nu)
+    else:  # sgd + momentum
+        mom = jax.tree.map(lambda m, g: cfg.momentum * m + g, state["mom"], grads)
+        new_params = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype), params, mom)
+        new_state = dict(state, step=step + 1, mom=mom)
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,7 @@
+# NOTE: do NOT set --xla_force_host_platform_device_count here.  The
+# multi-device dry-run owns that flag (src/repro/launch/dryrun.py); tests and
+# benches run on the single real CPU device.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,122 @@
+"""Flash attention (chunked, custom-VJP) vs the dense oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+RNG = np.random.default_rng(0)
+
+
+def _qkv(B, Sq, Sk, H, KVH, hd, dtype=jnp.float32):
+    q = jnp.asarray(RNG.normal(size=(B, Sq, H, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Sk, KVH, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Sk, KVH, hd)), dtype)
+    return q, k, v
+
+
+CASES = [
+    # B, Sq, Sk, H, KVH, hd, causal, window, softcap
+    (2, 257, 257, 4, 2, 32, True, None, 0.0),
+    (2, 128, 128, 4, 4, 16, True, None, 0.0),   # MHA
+    (1, 300, 300, 8, 1, 32, True, None, 0.0),   # MQA
+    (2, 200, 200, 4, 2, 32, True, 64, 0.0),     # sliding window
+    (2, 200, 200, 4, 2, 32, True, None, 30.0),  # softcap (gemma)
+    (2, 100, 250, 4, 2, 32, False, None, 0.0),  # cross attention
+]
+
+
+class TestFlashForward:
+    @pytest.mark.parametrize("B,Sq,Sk,H,KVH,hd,causal,window,cap", CASES)
+    def test_matches_dense(self, B, Sq, Sk, H, KVH, hd, causal, window, cap):
+        q, k, v = _qkv(B, Sq, Sk, H, KVH, hd)
+        od = L.dense_attention(q, k, v, causal=causal, window=window, softcap=cap)
+        of = L.flash_attention(q, k, v, causal, window, 0, cap, 64, 64)
+        np.testing.assert_allclose(np.asarray(od), np.asarray(of), atol=2e-5)
+
+    @pytest.mark.parametrize("cq,ck", [(32, 64), (128, 32), (256, 256)])
+    def test_chunk_size_invariance(self, cq, ck):
+        q, k, v = _qkv(2, 300, 300, 4, 2, 32)
+        ref = L.flash_attention(q, k, v, True, None, 0, 0.0, 64, 64)
+        out = L.flash_attention(q, k, v, True, None, 0, 0.0, cq, ck)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out), atol=2e-5)
+
+    def test_q_offset_continuation(self):
+        # attention over suffix queries with offset == slice of full result
+        q, k, v = _qkv(1, 256, 256, 4, 2, 32)
+        full = L.flash_attention(q, k, v, True, None, 0, 0.0, 64, 64)
+        tail = L.flash_attention(q[:, 192:], k, v, True, None, 192, 0.0, 64, 64)
+        np.testing.assert_allclose(np.asarray(full[:, 192:]), np.asarray(tail), atol=2e-5)
+
+    def test_bf16(self):
+        q, k, v = _qkv(2, 256, 256, 4, 2, 32, jnp.bfloat16)
+        od = L.dense_attention(q, k, v, causal=True)
+        of = L.flash_attention(q, k, v, True, None, 0, 0.0, 64, 64)
+        np.testing.assert_allclose(
+            np.asarray(od, np.float32), np.asarray(of, np.float32), atol=3e-2
+        )
+
+
+class TestFlashBackward:
+    @pytest.mark.parametrize("B,Sq,Sk,H,KVH,hd,causal,window,cap", CASES)
+    def test_grads_match_dense(self, B, Sq, Sk, H, KVH, hd, causal, window, cap):
+        q, k, v = _qkv(B, Sq, Sk, H, KVH, hd)
+
+        def fd(q, k, v):
+            return (L.dense_attention(q, k, v, causal=causal, window=window, softcap=cap) ** 2).sum()
+
+        def ff(q, k, v):
+            return (L.flash_attention(q, k, v, causal, window, 0, cap, 64, 64) ** 2).sum()
+
+        gd = jax.grad(fd, argnums=(0, 1, 2))(q, k, v)
+        gf = jax.grad(ff, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gd, gf):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+
+
+class TestDecode:
+    def test_matches_dense_with_positions(self):
+        B, S, H, KVH, hd = 3, 64, 4, 2, 16
+        q, k, v = _qkv(B, 1, S, H, KVH, hd)
+        pos = jnp.asarray([5, 30, 63])
+        od = L.decode_attention(q, k, v, pos)
+        oref = L.dense_attention(q, k, v, causal=True, q_positions=pos[:, None])
+        np.testing.assert_allclose(np.asarray(od), np.asarray(oref), atol=1e-5)
+
+    def test_ring_buffer_slots(self):
+        """Sliding-window decode: cache length == window, absolute positions
+        beyond the window wrap; attention must see exactly the last W keys."""
+        B, W, KVH, hd = 1, 8, 1, 4
+        H = 2
+        # fill a ring cache with positions 0..11 (cache holds 4..11)
+        cache_k = jnp.zeros((B, W, KVH, hd))
+        cache_v = jnp.zeros((B, W, KVH, hd))
+        keys = jnp.asarray(RNG.normal(size=(12, hd)), jnp.float32)
+        vals = jnp.asarray(RNG.normal(size=(12, hd)), jnp.float32)
+        for p in range(12):
+            cache_k = cache_k.at[0, p % W, 0].set(keys[p])
+            cache_v = cache_v.at[0, p % W, 0].set(vals[p])
+        q = jnp.asarray(RNG.normal(size=(B, 1, H, hd)), jnp.float32)
+        pos = jnp.asarray([11])
+        out = L.decode_attention(q, cache_k, cache_v, pos, window=W)
+        # reference: dense over the last W absolute positions 4..11
+        kref = keys[4:12][None, :, None, :]
+        vref = vals[4:12][None, :, None, :]
+        oref = L.dense_attention(q, kref, vref, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(oref), atol=1e-5)
+
+
+class TestDispatch:
+    def test_small_seq_uses_dense(self):
+        q, k, v = _qkv(1, 64, 64, 2, 2, 16)
+        out = L.attention(q, k, v, causal=True)
+        ref = L.dense_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+    def test_long_seq_uses_flash(self):
+        q, k, v = _qkv(1, 2048 + 64, 2048 + 64, 2, 2, 16)
+        out = L.attention(q, k, v, causal=True, dense_threshold=1024)
+        ref = L.dense_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)

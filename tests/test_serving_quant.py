@@ -1,0 +1,150 @@
+"""Quantized serving (int8 weight streaming), padded-MoE EP, and the
+chunkwise-parallel mLSTM — the beyond-paper optimizations of §Perf."""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.api import get_api
+
+
+class TestQuantizedServing:
+    @pytest.mark.parametrize("arch", ["tinyllama-1.1b", "gemma3-4b", "qwen2-moe-a2.7b",
+                                      "recurrentgemma-2b", "whisper-tiny"])
+    def test_int8_top1_agreement(self, arch):
+        cfg = C.get_config(arch, smoke=True)
+        api = get_api(cfg)
+        params = api.init_params(cfg, jax.random.key(0))
+        pq = L.quantize_for_serving(params, min_size=64)
+        rng = np.random.default_rng(0)
+        B, Sq = 2, 10
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, Sq)), jnp.int32)}
+        if "patches" in api.extra_keys:
+            batch["patches"] = jnp.asarray(rng.normal(size=(B, cfg.n_patches, cfg.d_model)), jnp.float32)
+        if "frames" in api.extra_keys:
+            batch["frames"] = jnp.asarray(rng.normal(size=(B, cfg.n_frames, cfg.d_model)), jnp.float32)
+        cache = api.init_cache(cfg, B, 32, jnp.float32)
+        lg_f, _ = api.prefill(cfg, params, batch, cache)
+        lg_q, cq = api.prefill(cfg, pq, batch, cache)
+        rel = float(jnp.linalg.norm(lg_f - lg_q) / (jnp.linalg.norm(lg_f) + 1e-9))
+        assert rel < 0.25, f"{arch}: int8 rel err {rel}"
+        # decode path also runs with quantized weights
+        prefix = api.prefix_len(cfg)
+        lgd, _ = api.decode_step(cfg, pq, cq, batch["tokens"][:, -1:],
+                                 jnp.full((B,), Sq + prefix, jnp.int32))
+        assert bool(jnp.isfinite(lgd).all())
+
+    def test_scales_per_stacked_layer(self):
+        # stacked (L, d, f) weights quantize with per-(L, channel) scales
+        w = {"w_up": jnp.stack([jnp.ones((64, 96)), 100.0 * jnp.ones((64, 96))])}
+        q = L.quantize_for_serving(w, min_size=16)
+        assert q["w_up"]["q"].shape == (2, 64, 96)
+        assert q["w_up"]["s"].shape == (2, 96)
+        assert float(q["w_up"]["s"][1, 0]) == pytest.approx(100 / 127, rel=1e-3)
+
+    def test_vectors_and_misc_leaves_untouched(self):
+        tree = {"w_rgate": jnp.ones((2, 64)), "conv": jnp.ones((4, 128)),
+                "b": jnp.ones((64,)), "r_gates": jnp.ones((4, 4, 64, 64))}
+        q = L.quantize_for_serving(tree, min_size=16)
+        for k in tree:
+            assert not isinstance(q[k], dict), k
+
+    def test_qdense_matches_dequant(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(64, 96)), jnp.float32)
+        q = L.quantize_for_serving({"w": w}, min_size=16)["w"]
+        y = L.qdense(x, q)
+        ref = x @ (q["q"].astype(jnp.float32) * q["s"][None, :])
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-4)
+
+
+class TestChunkwiseMLSTM:
+    def _setup(self, B=2, Ss=70, d=32):
+        from repro.configs.base import ModelConfig
+        cfg = ModelConfig(name="t", family="ssm", n_layers=1, d_model=d, n_heads=4,
+                          n_kv_heads=4, d_ff=0, vocab=16, compute_dtype="float32")
+        p = S.init_mlstm(cfg, jax.random.key(0))
+        x = jax.random.normal(jax.random.key(1), (B, Ss, d)) * 0.5
+        return cfg, p, x
+
+    def test_matches_sequential(self):
+        cfg, p, x = self._setup()
+        B, Ss, _ = x.shape
+        st = S.init_mlstm_state(cfg, B, jnp.float32)
+        outs = []
+        st_seq = st
+        for t in range(Ss):
+            y, st_seq = S.apply_mlstm(cfg, p, x[:, t:t + 1], st_seq)  # S==1: sequential
+            outs.append(y)
+        y_seq = jnp.concatenate(outs, axis=1)
+        for chunk in (16, 64, 33):
+            y_c, st_c = S.apply_mlstm(cfg, p, x, S.init_mlstm_state(cfg, B, jnp.float32),
+                                      chunk=chunk)
+            np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_seq), atol=1e-5)
+            np.testing.assert_allclose(np.asarray(st_c["C"]), np.asarray(st_seq["C"]), atol=1e-4)
+            np.testing.assert_allclose(np.asarray(st_c["m"]), np.asarray(st_seq["m"]), atol=1e-4)
+
+    def test_gradients_finite(self):
+        cfg, p, x = self._setup(Ss=40)
+
+        def loss(p):
+            y, _ = S.apply_mlstm(cfg, p, x, chunk=16)
+            return (y ** 2).sum()
+
+        g = jax.grad(loss)(p)
+        assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))
+
+    def test_state_continuation(self):
+        # chunkwise over [0:50) then [50:70) == chunkwise over [0:70)
+        cfg, p, x = self._setup(Ss=70)
+        st0 = S.init_mlstm_state(cfg, 2, jnp.float32)
+        y_full, _ = S.apply_mlstm(cfg, p, x, st0, chunk=16)
+        y1, st1 = S.apply_mlstm(cfg, p, x[:, :50], st0, chunk=16)
+        y2, _ = S.apply_mlstm(cfg, p, x[:, 50:], st1, chunk=16)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full), atol=1e-5
+        )
+
+
+class TestPaddedMoE:
+    def test_padded_experts_never_used(self):
+        cfg = C.get_config("qwen2-moe-a2.7b", smoke=True)
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, pad_to=8))
+        api = get_api(cfg)
+        p = api.init_params(cfg, jax.random.key(0))
+        # weights of padded experts (idx >= n_experts) get ZERO gradient
+        toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+        g = jax.grad(lambda p: api.loss_fn(cfg, p, {"tokens": toks, "labels": toks})[0])(p)
+        E = cfg.moe.n_experts
+        for leaf in jax.tree.leaves(g["unit"][0]["moe"]["w_gate"]):
+            pass
+        wg = g["unit"][0]["moe"]["w_gate"]
+        assert float(jnp.abs(wg[:, E:]).max()) == 0.0  # padded slice untouched
+
+    def test_padded_output_matches_unpadded(self):
+        cfg0 = C.get_config("qwen2-moe-a2.7b", smoke=True)
+        cfgp = dataclasses.replace(cfg0, moe=dataclasses.replace(cfg0.moe, pad_to=8))
+        api = get_api(cfg0)
+        p0 = api.init_params(cfg0, jax.random.key(0))
+        pp = api.init_params(cfgp, jax.random.key(0))
+        # copy the real experts' weights into the padded pytree
+        def graft(a, b):
+            if a.shape == b.shape:
+                return a
+            sl_ = tuple(slice(0, s) for s in a.shape)
+            return b.at[sl_].set(a)
+        pp = jax.tree.map(graft, p0, pp)
+        toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg0.vocab)
+        l0, _ = api.loss_fn(cfg0, p0, {"tokens": toks, "labels": toks})
+        lp, _ = api.loss_fn(cfgp, pp, {"tokens": toks, "labels": toks})
+        assert float(l0) == pytest.approx(float(lp), rel=1e-5)

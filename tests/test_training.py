@@ -1,0 +1,133 @@
+"""Optimizer / trainer correctness: AdamW math, grad accumulation
+equivalence, gradient-compression error feedback, schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.distributed import compression as GC
+from repro.models.api import get_api
+from repro.training import optimizer as O
+from repro.training.trainer import make_train_step
+
+
+class TestOptimizer:
+    def test_adamw_matches_manual(self):
+        cfg = O.OptimizerConfig(lr=0.1, beta1=0.9, beta2=0.99, eps=1e-8,
+                                weight_decay=0.0, grad_clip=0.0,
+                                warmup_steps=0, decay_steps=10**9, min_lr_ratio=1.0)
+        p = {"w": jnp.asarray([[1.0, 2.0]])}
+        g = {"w": jnp.asarray([[0.5, -0.5]])}
+        st = O.init_opt_state(cfg, p)
+        p1, st1, _ = O.apply_updates(cfg, p, g, st)
+        # manual adam step 0
+        m = 0.1 * np.asarray(g["w"])
+        v = 0.01 * np.asarray(g["w"]) ** 2
+        mhat = m / (1 - 0.9)
+        vhat = v / (1 - 0.99)
+        expect = np.asarray(p["w"]) - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+        np.testing.assert_allclose(np.asarray(p1["w"]), expect, rtol=1e-6)
+
+    def test_weight_decay_on_matrices_only(self):
+        cfg = O.OptimizerConfig(lr=0.1, weight_decay=1.0, grad_clip=0.0,
+                                warmup_steps=0, decay_steps=10**9, min_lr_ratio=1.0)
+        p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+        g = jax.tree.map(jnp.zeros_like, p)
+        st = O.init_opt_state(cfg, p)
+        p1, _, _ = O.apply_updates(cfg, p, g, st)
+        assert float(p1["w"][0, 0]) < 1.0  # decayed
+        assert float(p1["b"][0]) == 1.0  # not decayed
+
+    def test_grad_clip(self):
+        g = {"w": jnp.full((10,), 100.0)}
+        clipped, norm = O.clip_by_global_norm(g, 1.0)
+        assert float(norm) > 1.0
+        assert float(jnp.linalg.norm(clipped["w"])) == pytest.approx(1.0, rel=1e-5)
+
+    def test_lr_schedule_shape(self):
+        cfg = O.OptimizerConfig(lr=1.0, warmup_steps=10, decay_steps=100, min_lr_ratio=0.1)
+        lrs = [float(O.lr_schedule(cfg, jnp.asarray(s))) for s in (0, 9, 10, 50, 100, 1000)]
+        assert lrs[0] < lrs[1] <= lrs[2] == pytest.approx(1.0, rel=1e-3)
+        assert lrs[-1] == pytest.approx(0.1, rel=1e-3)
+        assert lrs[3] < 1.0
+
+
+class TestTrainer:
+    def _setup(self, accum=1, compression=None):
+        cfg = C.get_config("tinyllama-1.1b", smoke=True)
+        api = get_api(cfg)
+        params = api.init_params(cfg, jax.random.key(0))
+        opt_cfg = O.OptimizerConfig(lr=1e-3, grad_clip=1.0, warmup_steps=0,
+                                    decay_steps=10**9, min_lr_ratio=1.0)
+        opt = O.init_opt_state(opt_cfg, params, error_feedback=compression is not None)
+        step = make_train_step(cfg, api.loss_fn, opt_cfg, accum_steps=accum,
+                               compression=compression)
+        toks = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab)
+        batch = {"tokens": toks, "labels": toks}
+        return params, opt, step, batch
+
+    def test_grad_accum_equivalent(self):
+        p0, o0, step1, batch = self._setup(accum=1)
+        _, _, step4, _ = self._setup(accum=4)
+        pa, _, ma = jax.jit(step1)(p0, o0, batch)
+        pb, _, mb = jax.jit(step4)(p0, o0, batch)
+        assert float(ma["loss"]) == pytest.approx(float(mb["loss"]), rel=1e-5)
+        d = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)))
+        assert d < 5e-5  # identical up to reduction order
+
+    def test_loss_decreases(self):
+        params, opt, step, batch = self._setup()
+        jstep = jax.jit(step)
+        losses = []
+        for _ in range(20):
+            params, opt, m = jstep(params, opt, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] * 0.9
+
+    def test_compression_trains(self):
+        params, opt, step, batch = self._setup(compression="int8")
+        jstep = jax.jit(step)
+        losses = []
+        for _ in range(15):
+            params, opt, m = jstep(params, opt, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+
+
+class TestCompression:
+    def test_error_feedback_accumulates(self):
+        g = {"w": jnp.full((8, 8), 0.3)}
+        st = {"ef": jax.tree.map(jnp.zeros_like, g)}
+        dec, st = GC.compress_tree(g, st, kind="int8")
+        # residual = original - decoded
+        np.testing.assert_allclose(
+            np.asarray(st["ef"]["w"]), np.asarray(g["w"] - dec["w"]), atol=1e-7
+        )
+        # over many steps, mean compressed signal ~ mean true gradient
+        total = jnp.zeros((8, 8))
+        st = {"ef": {"w": jnp.zeros((8, 8))}}
+        for _ in range(50):
+            dec, st = GC.compress_tree(g, st, kind="int8")
+            total = total + dec["w"]
+        np.testing.assert_allclose(np.asarray(total / 50), np.asarray(g["w"]), rtol=0.01)
+
+    def test_topk_sparsity(self):
+        g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)), jnp.float32)}
+        st = {"ef": jax.tree.map(jnp.zeros_like, g)}
+        dec, _ = GC.compress_tree(g, st, kind="topk", topk_frac=0.1)
+        frac = float(jnp.mean(dec["w"] != 0))
+        assert frac == pytest.approx(0.1, abs=0.02)
+
+    def test_requires_ef_buffer(self):
+        g = {"w": jnp.ones((4, 4))}
+        with pytest.raises(ValueError):
+            GC.compress_tree(g, {}, kind="int8")
+
+    def test_payload_accounting(self):
+        g = {"w": jnp.ones((100, 100))}
+        assert GC.payload_bytes(g, None) == 40000
+        assert GC.payload_bytes(g, "int8") == 10000
+        assert GC.payload_bytes(g, "topk", 0.1) == pytest.approx(8000)
