@@ -14,6 +14,7 @@ from benchmarks import (
     fig7_latency,
     kernel_bench,
     nopt_validation,
+    pruned_serving,
     roofline,
     table2_throughput,
     table3_energy,
@@ -28,6 +29,7 @@ ALL = {
     "nopt": nopt_validation.main,
     "kernels": kernel_bench.main,
     "roofline": roofline.main,
+    "pruned_serving": pruned_serving.main,
 }
 
 

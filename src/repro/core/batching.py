@@ -128,11 +128,23 @@ class BatchSizer:
     max_latency_s: float | None = None
     q_prune: float = 0.0
     q_overhead: float = 1.0
+    # whether the datapath skips pruned blocks (Pallas block-sparse kernel:
+    # t_calc scales with 1 - q_prune, so pruning cancels out of the balance
+    # point) or executes them as masked zeros (t_calc dense: cheaper t_mem
+    # moves n_opt down by (1 - q_prune)).  See perf_model.decode_n_opt.
+    sparse_compute: bool = True
 
     @property
     def n_opt(self) -> int:
-        n = pm.decode_n_opt(self.peak_flops, self.hbm_bw, self.b_weight)
-        return max(1, int(round(n * self.q_overhead)))
+        n = pm.decode_n_opt(
+            self.peak_flops,
+            self.hbm_bw,
+            self.b_weight,
+            q_prune=self.q_prune,
+            q_overhead=self.q_overhead,
+            sparse_compute=self.sparse_compute,
+        )
+        return max(1, int(round(n)))
 
     def step_time(self, batch: int, context_len: int = 0, kv_bytes_per_token: float = 0.0) -> float:
         return pm.decode_step_time(
@@ -146,6 +158,7 @@ class BatchSizer:
             self.n_chips,
             self.q_prune,
             self.q_overhead,
+            self.sparse_compute,
         )["t_proc"]
 
     def pick(self, waiting: int, context_len: int = 0, kv_bytes_per_token: float = 0.0) -> int:
@@ -168,6 +181,8 @@ def efficiency_curve(sizer: BatchSizer, batches: Sequence[int]) -> list[dict]:
                 "batch": b,
                 "step_s": t,
                 "tokens_per_s": b / t,
+                # useful model FLOPs only: masked-zero MACs executed under
+                # sparse_compute=False are occupancy, not model work
                 "model_flops_util": min(
                     1.0,
                     2.0 * sizer.n_params * (1 - sizer.q_prune) * b

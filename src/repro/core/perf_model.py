@@ -269,6 +269,9 @@ def decode_n_opt(
     peak_flops: float = TPU_V5E_PEAK_FLOPS,
     hbm_bw: float = TPU_V5E_HBM_BW,
     b_weight: float = 2.0,
+    q_prune: float = 0.0,
+    q_overhead: float = 1.0,
+    sparse_compute: bool = True,
 ) -> float:
     """Batch size at which decode flips from HBM-bound to compute-bound.
 
@@ -278,8 +281,19 @@ def decode_n_opt(
 
     This is the paper's n_opt with (m*r*f_pu) -> peak_flops/2 [MACs/s] and
     T_mem -> hbm_bw.
+
+    Pruning (Section 5.6): with a kernel that skips pruned blocks
+    (``sparse_compute=True``) both t_calc and t_mem scale with (1 - q_prune),
+    so the balance point moves only by the format overhead q_overhead —
+    exactly the paper's claim that the optimizations compose.  With
+    masked-dense execution (``sparse_compute=False``) only t_mem shrinks and
+    n_opt scales with (1 - q_prune): a smaller batch already saturates the
+    MXU because the weight stream got cheaper but the MACs did not.
     """
-    return peak_flops * b_weight / (2.0 * hbm_bw)
+    n = peak_flops * b_weight * q_overhead / (2.0 * hbm_bw)
+    if not sparse_compute:
+        n *= 1.0 - q_prune
+    return n
 
 
 def decode_step_time(
@@ -293,16 +307,19 @@ def decode_step_time(
     n_chips: int = 1,
     q_prune: float = 0.0,
     q_overhead: float = 1.0,
+    sparse_compute: bool = True,
 ) -> dict:
     """Two-term decode-step model for an LM with n_params weights.
 
     Returns dict with t_calc, t_mem, t_proc, bound ('compute'|'memory').
     KV-cache reads (batch * context * kv_bytes) ride on the memory term —
     they are the per-sample data the paper's model counts as negligible for
-    FC nets but which matter at 32k+ contexts.
+    FC nets but which matter at 32k+ contexts.  ``sparse_compute`` states
+    whether the kernel skips pruned blocks (t_calc scales with 1 - q_prune)
+    or executes them as masked zeros (t_calc stays dense).
     """
     eff_params = n_params * (1.0 - q_prune)
-    flops = 2.0 * eff_params * batch
+    flops = 2.0 * (eff_params if sparse_compute else n_params) * batch
     weight_bytes = eff_params * b_weight * q_overhead
     kv_read = batch * context_len * kv_bytes_per_token
     tc = flops / (peak_flops * n_chips)

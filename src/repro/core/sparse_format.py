@@ -221,6 +221,17 @@ class BlockSparse:
         return (p + self.metadata_bytes()) / max(1.0, p)
 
 
+# Pytree registration: array payloads are children, geometry is static aux —
+# a BlockSparse (and any params pytree containing one) passes through jit /
+# scan / vmap boundaries like a plain array, which is what lets the serving
+# engine keep one compiled decode step over compressed weights.
+jax.tree_util.register_dataclass(
+    BlockSparse,
+    data_fields=["blocks", "block_rows", "counts"],
+    meta_fields=["shape", "cfg"],
+)
+
+
 def to_block_sparse(
     w: jax.Array, q_prune: float, cfg: BlockPruneConfig | None = None
 ) -> BlockSparse:

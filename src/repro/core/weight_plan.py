@@ -1,0 +1,551 @@
+"""Compressed-weight execution plan: one representation decision per matmul.
+
+This is where the paper's two optimizations finally compose end-to-end.
+Batch processing (serving/engine.py) amortizes each streamed weight across
+the live decode batch; pruning + weight encoding (Sections 4.1 / 4.3 / 5.6)
+shrink the stream itself.  The plan walks a model's params pytree, assigns
+every large matmul weight one of four representations, materializes the
+compressed pytree, and provides the single dispatch (``apply_linear``)
+every layer routes its matmuls through:
+
+    ``dense``        — fp weights, streamed as-is (b_weight = 2, bf16).
+    ``quant``        — int8 payload + per-output-channel fp32 scales
+                       (Section 4.1 at int8; the legacy ``{"q","s"}`` dict
+                       consumed by ``qdense`` since the quant-serving PR).
+    ``block_sparse`` — surviving (bk, bn) blocks packed per block-column
+                       with int32 row indices (the z_w analogue,
+                       Section 5.6) — fp payload.
+    ``quant_sparse`` — both: int8 block payload + scales.  t_mem shrinks by
+                       (1 - q_prune) * b_weight/2 * q_overhead; at batch
+                       n_opt, t_calc shrinks with (1 - q_prune) too — the
+                       paper's combined-optimization claim.
+
+The compressed pytree has the same treedef shape as the dense one (leaves
+become ``PackedLinear`` pytree nodes or ``{"q","s"}`` dicts), so it scans,
+vmaps, jits and donates exactly like dense params: the serving engine keeps
+its single compiled decode step.
+
+Stats from the plan (surviving weights, payload/metadata bytes) feed
+``core.batching.BatchSizer`` so n_opt moves the way Section 5.6 predicts:
+with a kernel that skips pruned blocks both t_calc and t_mem scale with
+(1 - q_prune) and n_opt depends only on q_overhead; with masked-dense
+compute (no skipping) n_opt scales with (1 - q_prune).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.pruning import BlockPruneConfig, block_mask, expand_block_mask
+from repro.core.sparse_format import BlockSparse
+
+REPRS = ("dense", "quant", "block_sparse", "quant_sparse")
+
+# Leaves consumed by qdense / embed / unembed call sites, by name.
+QUANT_KEYS = ("w", "tok", "head")
+
+
+# ---------------------------------------------------------------------------
+# packed representation (a pytree node: scans/vmaps/jits like a plain array)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLinear:
+    """One block-sparse (optionally int8) matmul weight.
+
+    Dense shape (K, N) in (bk, bn) blocks; per block-column j the surviving
+    blocks are stored contiguously (zero-padded to ``mb`` = max blocks per
+    column so the layout is static):
+
+      blocks:     (n_cols * mb, bk, bn)  payload — fp32 or int8
+      block_rows: (n_cols, mb) int32     row-block index per stored block
+      counts:     (n_cols,) int32        true survivor count per column
+      scales:     (N,) fp32 or None      per-output-channel dequant scales
+                                         (present iff kind == quant_sparse)
+
+    Stacked variants (scan units and/or MoE experts) carry the matching
+    leading dims on every child; ``apply_linear`` detects that and vmaps
+    (recursively — a scan-stacked MoE leaf has two leading dims).
+    ``lax.scan`` slices the children the same way it slices plain stacked
+    arrays, so the unit-scan compile discipline is untouched.
+    """
+
+    blocks: Any
+    block_rows: Any
+    counts: Any
+    scales: Optional[Any]
+    # static metadata (pytree aux): per-matrix dense shape + block geometry
+    kind: str = "block_sparse"
+    shape: tuple = ()
+    bk: int = 128
+    bn: int = 128
+    use_kernel: bool = False
+    interpret: bool = False
+
+    @property
+    def stacked(self) -> bool:
+        return self.blocks.ndim > 3
+
+    def to_block_sparse(self) -> BlockSparse:
+        """View (unstacked) as the BlockSparse the Pallas kernel consumes."""
+        assert not self.stacked
+        return BlockSparse(
+            blocks=self.blocks,
+            block_rows=self.block_rows,
+            counts=self.counts,
+            shape=self.shape,
+            cfg=BlockPruneConfig(bk=self.bk, bn=self.bn),
+        )
+
+
+jax.tree_util.register_dataclass(
+    PackedLinear,
+    data_fields=["blocks", "block_rows", "counts", "scales"],
+    meta_fields=["kind", "shape", "bk", "bn", "use_kernel", "interpret"],
+)
+
+
+# ---------------------------------------------------------------------------
+# plan configuration + assignment
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanConfig:
+    """How to compress a model for serving.
+
+    default:   representation for every eligible matmul leaf.
+    rules:     ((path_substring, repr), ...) — first match overrides the
+               default (e.g. (("embed", "quant"), ("w_down", "dense"))).
+    q_prune:   block-pruned fraction for the sparse representations.
+    bk/bn:     block geometry (MXU-aligned 128x128 in production; smaller in
+               tests so tiny configs have enough blocks to prune).
+    min_size / min_contract: eligibility floor (same as quant serving: tiny
+               mats stay dense — streaming them is free anyway).
+    use_kernel/interpret: route unstacked 2-D sparse matmuls through the
+               Pallas kernel (interpret=True for CPU tests).
+    """
+
+    default: str = "quant_sparse"
+    rules: tuple = ()
+    q_prune: float = 0.0
+    bk: int = 128
+    bn: int = 128
+    score: str = "l1"
+    min_size: int = 16384
+    min_contract: int = 64
+    use_kernel: bool = False
+    interpret: bool = False
+
+    def __post_init__(self):
+        if self.default not in REPRS:
+            raise ValueError(f"default must be one of {REPRS}, got {self.default!r}")
+        if not 0.0 <= self.q_prune < 1.0:
+            raise ValueError(f"q_prune must be in [0, 1), got {self.q_prune}")
+
+    @property
+    def block(self) -> BlockPruneConfig:
+        return BlockPruneConfig(bk=self.bk, bn=self.bn, score=self.score)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def path_str(path) -> str:
+    return "/".join(_key_str(k) for k in path)
+
+
+def leaf_name(path) -> str:
+    return _key_str(path[-1]) if path else ""
+
+
+def _quant_eligible(name: str, leaf, cfg: PlanConfig) -> bool:
+    return (
+        hasattr(leaf, "ndim")
+        and leaf.ndim >= 2
+        and leaf.size >= cfg.min_size
+        and leaf.shape[-2] >= cfg.min_contract  # a real contraction dim
+        and (name.startswith("w") or name in QUANT_KEYS)
+    )
+
+
+def _sparse_eligible(name: str, leaf, cfg: PlanConfig) -> bool:
+    """Sparse packing needs a projection-style matmul weight (w*): embedding
+    tables are consumed by gather (tok) or a transposed tied unembed (head),
+    neither of which the block layout serves; shapes must tile exactly."""
+    if not (_quant_eligible(name, leaf, cfg) and name.startswith("w")):
+        return False
+    K, N = leaf.shape[-2], leaf.shape[-1]
+    return K % cfg.bk == 0 and N % cfg.bn == 0 and K // cfg.bk >= 1 and N // cfg.bn >= 1
+
+
+def assign_repr(path, leaf, cfg: PlanConfig) -> str:
+    """Representation for one leaf: rules override the default; ineligible
+    leaves degrade gracefully (quant_sparse -> quant -> dense)."""
+    name = leaf_name(path)
+    ps = path_str(path)
+    kind = cfg.default
+    for sub, k in cfg.rules:
+        if sub in ps:
+            kind = k
+            break
+    if kind not in REPRS:
+        raise ValueError(f"unknown representation {kind!r} for {ps}")
+    if kind in ("block_sparse", "quant_sparse") and not _sparse_eligible(name, leaf, cfg):
+        kind = "quant" if kind == "quant_sparse" else "dense"
+    if kind == "quant" and not _quant_eligible(name, leaf, cfg):
+        kind = "dense"
+    return kind
+
+
+# ---------------------------------------------------------------------------
+# packing (host-side, build time)
+# ---------------------------------------------------------------------------
+
+
+def quantize_leaf(leaf):
+    """int8-quantize one matmul weight into the {"q", "s"} dict ``qdense``
+    consumes.  Scales reduce over the contraction axis (-2) only, so stacked
+    per-layer / per-expert weights keep independent per-(layer, channel)
+    scales and scan slicing stays aligned: q (L, d, f) pairs with s (L, f)."""
+    lf = jnp.asarray(leaf, jnp.float32)
+    amax = jnp.max(jnp.abs(lf), axis=-2, keepdims=True)
+    scales = jnp.maximum(amax, 1e-8) / 127.0
+    qv = jnp.clip(jnp.round(lf / scales), -127, 127).astype(jnp.int8)
+    return {"q": qv, "s": jnp.squeeze(scales, axis=-2)}
+
+
+def quantize_for_serving(params, min_size: int = 16384):
+    """int8-quantize all eligible matmul weights (the pre-plan API; kept as
+    the ``quant``-everywhere special case of ``compress``)."""
+    cfg = PlanConfig(default="quant", min_size=min_size)
+
+    def q(path, leaf):
+        if hasattr(leaf, "ndim") and _quant_eligible(leaf_name(path), leaf, cfg):
+            return quantize_leaf(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(q, params)
+
+
+def pack_block_sparse(leaf, cfg: PlanConfig, quant: bool) -> PackedLinear:
+    """Prune ``leaf`` to block sparsity cfg.q_prune and pack it.
+
+    Handles any leading stacking dims (scan units, MoE experts, or both):
+    each (K, N) slice is pruned independently; ``mb`` (stored blocks per
+    column) is the max over all slices and columns so the packed layout is
+    rectangular and scan/vmap slicing stays trivial.  Padded entries are
+    zero blocks with row index 0 — they multiply by zero, and the kernel
+    additionally skips them via ``counts``.
+    """
+    w = np.asarray(jnp.asarray(leaf, jnp.float32))
+    lead = w.shape[:-2]
+    ws = w.reshape((-1,) + w.shape[-2:])
+    L, K, N = ws.shape
+    bk, bn = cfg.bk, cfg.bn
+    nrb, ncb = K // bk, N // bn
+
+    masks = np.stack(
+        [np.asarray(block_mask(jnp.asarray(ws[l]), cfg.q_prune, cfg.block)) for l in range(L)]
+    )  # (L, nrb, ncb)
+    counts = masks.sum(axis=1).astype(np.int32)  # (L, ncb)
+    mb = max(1, int(counts.max()))
+
+    # (L, nrb, ncb, bk, bn) block view for panel gathering
+    wb = ws.reshape(L, nrb, bk, ncb, bn).transpose(0, 1, 3, 2, 4)
+
+    scales = None
+    if quant:
+        # per-(slice, output-channel) scales over the *masked* matrix, so a
+        # column whose largest weights were pruned keeps full int8 range
+        wm = ws * np.stack(
+            [np.asarray(expand_block_mask(jnp.asarray(masks[l]), cfg.block)) for l in range(L)]
+        )
+        amax = np.abs(wm).max(axis=1)  # (L, N)
+        scales = np.maximum(amax, 1e-8).astype(np.float32) / 127.0
+
+    pdtype = np.int8 if quant else np.float32
+    blocks = np.zeros((L, ncb * mb, bk, bn), pdtype)
+    rows = np.zeros((L, ncb, mb), np.int32)
+    for l in range(L):
+        for j in range(ncb):
+            for s, i in enumerate(np.nonzero(masks[l, :, j])[0]):
+                payload = wb[l, i, j]
+                if quant:
+                    sc = scales[l, j * bn : (j + 1) * bn][None, :]
+                    payload = np.clip(np.round(payload / sc), -127, 127)
+                blocks[l, j * mb + s] = payload
+                rows[l, j, s] = i
+
+    blocks = blocks.reshape(lead + blocks.shape[1:])
+    rows = rows.reshape(lead + rows.shape[1:])
+    counts = counts.reshape(lead + counts.shape[1:])
+    if scales is not None:
+        scales = scales.reshape(lead + scales.shape[1:])
+    return PackedLinear(
+        blocks=jnp.asarray(blocks),
+        block_rows=jnp.asarray(rows),
+        counts=jnp.asarray(counts),
+        scales=None if scales is None else jnp.asarray(scales),
+        kind="quant_sparse" if quant else "block_sparse",
+        shape=(K, N),
+        bk=bk,
+        bn=bn,
+        use_kernel=cfg.use_kernel,
+        interpret=cfg.interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# plan object + stats
+# ---------------------------------------------------------------------------
+
+_DENSE_STREAM_BYTES = 2.0  # dense weights are streamed bf16 at serving time
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    path: str
+    kind: str
+    shape: tuple
+    n_weights: int
+    surviving: int  # weights actually streamed (== n_weights unless pruned)
+    payload_bytes: float
+    metadata_bytes: float
+
+    @property
+    def bytes(self) -> float:
+        return self.payload_bytes + self.metadata_bytes
+
+    @property
+    def q_prune(self) -> float:
+        return 1.0 - self.surviving / max(1, self.n_weights)
+
+
+@dataclasses.dataclass
+class WeightPlan:
+    """The materialized plan: per-leaf assignments + the compressed pytree.
+
+    ``params`` is treedef-compatible with the dense pytree it came from —
+    pass it anywhere dense params go (prefill, decode_step, ServingEngine).
+    """
+
+    cfg: PlanConfig
+    leaves: dict  # path -> LeafPlan
+    params: Any = None
+    _by_path: dict = dataclasses.field(default_factory=dict)
+
+    # -- the one dispatch ---------------------------------------------------
+
+    def apply_linear(self, path: str, x: jax.Array) -> jax.Array:
+        """y = x @ W for the planned weight at ``path`` (e.g.
+        "unit/0/mlp/w_up"), whatever representation it was assigned."""
+        if path not in self._by_path:
+            raise KeyError(f"no planned weight at {path!r}; known: {sorted(self._by_path)[:8]}...")
+        return apply_linear(x, self._by_path[path])
+
+    # -- aggregate stats (feed the perf model / BatchSizer) -----------------
+
+    @property
+    def n_weights(self) -> int:
+        return sum(l.n_weights for l in self.leaves.values())
+
+    @property
+    def surviving_weights(self) -> int:
+        return sum(l.surviving for l in self.leaves.values())
+
+    @property
+    def weight_bytes(self) -> float:
+        """HBM bytes streamed per decode step (payload + metadata)."""
+        return sum(l.bytes for l in self.leaves.values())
+
+    @property
+    def q_prune_effective(self) -> float:
+        return 1.0 - self.surviving_weights / max(1, self.n_weights)
+
+    @property
+    def b_weight_effective(self) -> float:
+        """Payload bytes per *surviving* weight (the perf model's b_weight)."""
+        payload = sum(l.payload_bytes for l in self.leaves.values())
+        return payload / max(1, self.surviving_weights)
+
+    @property
+    def q_overhead_effective(self) -> float:
+        """Metadata inflation per payload byte (the paper's q_overhead)."""
+        payload = sum(l.payload_bytes for l in self.leaves.values())
+        return self.weight_bytes / max(1.0, payload)
+
+    def sizer(self, *, sparse_compute: bool = True, **kw):
+        """A BatchSizer with this plan's memory-traffic corrections applied:
+        n_opt then moves the way the paper's Section 5.6 predicts."""
+        from repro.core.batching import BatchSizer
+
+        kw.setdefault("n_params", self.n_weights)
+        return BatchSizer(
+            b_weight=self.b_weight_effective,
+            q_prune=self.q_prune_effective,
+            q_overhead=self.q_overhead_effective,
+            sparse_compute=sparse_compute,
+            **kw,
+        )
+
+    def summary(self) -> str:
+        by_kind: dict = {}
+        for l in self.leaves.values():
+            agg = by_kind.setdefault(l.kind, [0, 0.0])
+            agg[0] += 1
+            agg[1] += l.bytes
+        parts = [f"{k}:{n} ({b/1e6:.2f} MB)" for k, (n, b) in sorted(by_kind.items())]
+        return (
+            f"plan[{', '.join(parts)}] "
+            f"q_prune={self.q_prune_effective:.3f} "
+            f"b_weight={self.b_weight_effective:.2f} "
+            f"q_overhead={self.q_overhead_effective:.4f} "
+            f"bytes/step={self.weight_bytes/1e6:.2f} MB"
+        )
+
+
+def _leaf_stats(path: str, kind: str, leaf, packed) -> LeafPlan:
+    n = int(np.prod(leaf.shape)) if hasattr(leaf, "shape") else 1
+    shape = tuple(getattr(leaf, "shape", ()))
+    if kind == "dense":
+        return LeafPlan(path, kind, shape, n, n, n * _DENSE_STREAM_BYTES, 0.0)
+    if kind == "quant":
+        scales = packed["s"]
+        return LeafPlan(path, kind, shape, n, n, float(n), 4.0 * scales.size)
+    # sparse kinds
+    p: PackedLinear = packed
+    counts = np.asarray(p.counts)
+    surv_blocks = int(counts.sum())
+    surviving = surv_blocks * p.bk * p.bn
+    b = 1.0 if kind == "quant_sparse" else _DENSE_STREAM_BYTES
+    payload = surviving * b
+    meta = 4.0 * surv_blocks + 4.0 * counts.size  # row idx per block + counts
+    if p.scales is not None:
+        meta += 4.0 * np.asarray(p.scales).size
+    return LeafPlan(path, kind, shape, n, surviving, payload, meta)
+
+
+def compress(params, cfg: PlanConfig = PlanConfig()) -> WeightPlan:
+    """Walk ``params``, assign each leaf a representation, pack, and return
+    the WeightPlan (with ``plan.params`` the compressed pytree)."""
+    leaves: dict = {}
+    by_path: dict = {}
+
+    def _one(path, leaf):
+        if not hasattr(leaf, "ndim"):
+            return leaf
+        ps = path_str(path)
+        kind = assign_repr(path, leaf, cfg)
+        if kind == "dense":
+            packed = leaf
+        elif kind == "quant":
+            packed = quantize_leaf(leaf)
+        else:
+            packed = pack_block_sparse(leaf, cfg, quant=(kind == "quant_sparse"))
+        leaves[ps] = _leaf_stats(ps, kind, leaf, packed)
+        by_path[ps] = packed
+        return packed
+
+    compressed = jax.tree_util.tree_map_with_path(_one, params)
+    return WeightPlan(cfg=cfg, leaves=leaves, params=compressed, _by_path=by_path)
+
+
+# ---------------------------------------------------------------------------
+# the runtime dispatch — every layer's matmuls route through here
+# ---------------------------------------------------------------------------
+
+
+def apply_linear(x: jax.Array, w) -> jax.Array:
+    """y = x @ W for any planned representation of W.
+
+    W is a plain array (dense), a {"q", "s"} dict (int8 quant), or a
+    PackedLinear (block-sparse, optionally int8).  Stacked weights (one
+    leading dim: MoE experts, unsliced unit stacks) pair with an equally
+    stacked leading dim on x and vmap down to the 2-D case.  x may carry any
+    extra leading dims (batch, sequence).
+    """
+    if isinstance(w, PackedLinear):
+        if w.stacked:
+            return jax.vmap(apply_linear)(x, w)
+        return _apply_packed(x, w)
+    if isinstance(w, dict) and "q" in w:
+        if w["q"].ndim > 2:
+            return jax.vmap(apply_linear)(x, w)
+        return _apply_quant(x, w)
+    if getattr(w, "ndim", 2) > 2:
+        return jax.vmap(apply_linear)(x, w)
+    return x @ w.astype(x.dtype)
+
+
+def _apply_quant(x, w):
+    """int8 path: 1 byte/weight from HBM (Section 4.1 at int8), dequantized
+    in the epilogue — (x @ q) * s with f32 accumulation; scales factor out
+    of the contraction."""
+    dt = x.dtype
+    y = jax.lax.dot_general(
+        x, w["q"].astype(dt),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return (y * w["s"].astype(jnp.float32)).astype(dt)
+
+
+def _apply_packed(x, w: PackedLinear):
+    K, N = w.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, K)
+    if w.use_kernel:
+        y = _packed_kernel_matmul(x2, w)
+    else:
+        y = _packed_ref_matmul(x2, w)
+    return y.astype(x.dtype).reshape(*lead, N)
+
+
+def _packed_ref_matmul(x2: jax.Array, w: PackedLinear) -> jax.Array:
+    """Gather-based reference datapath (pure jnp — runs anywhere, vmappable).
+
+    The activation gather by ``block_rows`` is the offset-calculation IP of
+    Section 5.6 expressed as indexing; padded blocks are zero so ``counts``
+    is not consulted (the kernel path uses it to skip MACs).
+    """
+    K, N = w.shape
+    M = x2.shape[0]
+    n_cols, mb = w.block_rows.shape
+    xb = x2.reshape(M, K // w.bk, w.bk)
+    xsel = jnp.take(xb, w.block_rows.reshape(-1), axis=1)  # (M, n_cols*mb, bk)
+    xsel = xsel.reshape(M, n_cols, mb, w.bk)
+    bl = w.blocks.reshape(n_cols, mb, w.bk, w.bn)
+    y = jnp.einsum(
+        "mcsk,cskn->mcn",
+        xsel.astype(jnp.float32),
+        bl.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).reshape(M, N)
+    if w.scales is not None:
+        y = y * w.scales.astype(jnp.float32)
+    return y
+
+
+def _packed_kernel_matmul(x2: jax.Array, w: PackedLinear) -> jax.Array:
+    """Pallas block-sparse kernel path: pruned blocks are never read from HBM
+    and never enter the MXU (ops wrapper pads the row dim / picks interpret
+    mode off-TPU)."""
+    from repro.kernels import ops
+
+    return ops.block_sparse_matmul(
+        x2, w.to_block_sparse(), scales=w.scales,
+        interpret=True if w.interpret else None,
+    )

@@ -35,14 +35,17 @@ def _bsmm_kernel(
     # scalar prefetch operands (SMEM)
     block_rows_ref,  # (n_cols * max_blocks,) flattened row index per block
     counts_ref,  # (n_cols,)
-    # array operands
+    # array operands: x_ref, w_ref, [scale_ref], o_ref, acc_ref
     x_ref,  # (block_b, bk) activation tile, selected by block_rows
-    w_ref,  # (1, bk, bn) weight block payload
-    o_ref,  # (block_b, bn) output tile
-    acc_ref,  # VMEM scratch accumulator
-    *,
+    w_ref,  # (1, bk, bn) weight block payload (fp or int8)
+    *refs,
     max_blocks: int,
+    has_scales: bool,
 ):
+    if has_scales:
+        scale_ref, o_ref, acc_ref = refs
+    else:
+        scale_ref, (o_ref, acc_ref) = None, refs
     s = pl.program_id(2)  # position in the block-column's list
 
     @pl.when(s == 0)
@@ -64,20 +67,29 @@ def _bsmm_kernel(
 
     @pl.when(s == max_blocks - 1)
     def _out():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        acc = acc_ref[...]
+        if has_scales:
+            # int8 payload epilogue (quant+sparse): per-output-channel
+            # dequant, deferred out of the MAC loop exactly as in
+            # kernels/quant_matmul — scales factor out of the k-sum.
+            acc = acc * scale_ref[...].astype(jnp.float32)
+        o_ref[...] = acc.astype(o_ref.dtype)
 
 
 def block_sparse_matmul(
     x: jax.Array,
     sparse: BlockSparse,
     *,
+    scales: jax.Array | None = None,
     block_b: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
     """y = x @ W  with W block-sparse.  x: (B, K) -> y: (B, N).
 
     B must be a multiple of block_b; K, N are multiples of (bk, bn) by
-    construction of BlockSparse.
+    construction of BlockSparse.  ``scales`` (N,) enables the quant+sparse
+    composition: int8 block payloads dequantized per output channel in the
+    kernel epilogue — the weight stream is then (1 - q_prune) * 1 byte/weight.
     """
     B, K = x.shape
     Kw, N = sparse.shape
@@ -102,22 +114,31 @@ def block_sparse_matmul(
     def o_index(bt, j, s, rows, counts):
         return (bt, j)
 
+    in_specs = [
+        pl.BlockSpec((block_b, cfg.bk), x_index),
+        pl.BlockSpec((1, cfg.bk, cfg.bn), w_index),
+    ]
+    operands = [x, sparse.blocks]
+    if scales is not None:
+        assert scales.shape == (N,), (scales.shape, N)
+        in_specs.append(pl.BlockSpec((1, cfg.bn), lambda bt, j, s, rows, counts: (0, j)))
+        operands.append(scales.reshape(1, N))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, cfg.bk), x_index),
-            pl.BlockSpec((1, cfg.bk, cfg.bn), w_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, cfg.bn), o_index),
         scratch_shapes=[pltpu.VMEM((block_b, cfg.bn), jnp.float32)],
     )
 
-    kernel = functools.partial(_bsmm_kernel, max_blocks=mb)
+    kernel = functools.partial(
+        _bsmm_kernel, max_blocks=mb, has_scales=scales is not None
+    )
 
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
         interpret=interpret,
-    )(flat_rows, sparse.counts, x, sparse.blocks)
+    )(flat_rows, sparse.counts, *operands)

@@ -64,16 +64,23 @@ def batched_ffn(
 def block_sparse_matmul(
     x: jax.Array,
     sparse: BlockSparse,
+    scales: jax.Array | None = None,
     block_b: int = 128,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """x @ W_blocksparse. Pads the batch dim only (K/N are block-aligned)."""
+    """x @ W_blocksparse. Pads the batch dim only (K/N are block-aligned).
+
+    ``scales`` (N,) selects the quant+sparse epilogue (int8 block payloads
+    dequantized per output channel inside the kernel).
+    """
     if interpret is None:
         interpret = not _on_tpu()
     B = x.shape[0]
     block_b = min(block_b, max(8, B))
     xp = _pad_dim(x, 0, block_b)
-    y = _bs.block_sparse_matmul(xp, sparse, block_b=block_b, interpret=interpret)
+    y = _bs.block_sparse_matmul(
+        xp, sparse, scales=scales, block_b=block_b, interpret=interpret
+    )
     return y[:B]
 
 

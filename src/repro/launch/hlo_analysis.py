@@ -216,7 +216,13 @@ def _canon(name: str) -> str:
 
 
 def _operand_name(operand: str) -> Optional[str]:
-    m = re.match(r"%?([\w.\-]+)$", operand.strip())
+    # newer XLA prints operands with their type inline
+    # ("f32[128,128]{1,0} %name"); older prints just "%name" — take the
+    # last token either way.
+    toks = operand.strip().split()
+    if not toks:
+        return None
+    m = re.match(r"%?([\w.\-]+)$", toks[-1])
     if m:
         return "%" + m.group(1)
     return None

@@ -1,11 +1,13 @@
 """Serving driver: continuous-batching engine demo / load generator.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
-        --requests 32 --max-new 16
+        --requests 32 --max-new 16 --compress quant_sparse --q-prune 0.5
 
 Reports throughput, mean batch occupancy (the realized paper-style weight
 reuse factor), and the n_opt the BatchSizer would pick on the target
-hardware.
+hardware.  ``--compress`` serves through a compressed-weight execution plan
+(core/weight_plan): the weight stream shrinks by quantization and/or block
+pruning and the reported n_opt moves accordingly (Section 5.6).
 """
 
 from __future__ import annotations
@@ -18,6 +20,7 @@ import numpy as np
 
 import repro.configs as C
 from repro.core.batching import BatchSizer
+from repro.core.weight_plan import PlanConfig
 from repro.models.api import get_api
 from repro.serving.engine import Request, ServingEngine
 
@@ -32,6 +35,12 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compress", default="none",
+                    choices=("none", "quant", "block_sparse", "quant_sparse"),
+                    help="weight representation for the serving plan")
+    ap.add_argument("--q-prune", type=float, default=0.0,
+                    help="block-pruned fraction for the sparse representations")
+    ap.add_argument("--block", type=int, default=128, help="sparse block edge (bk=bn)")
     args = ap.parse_args(argv)
 
     cfg = C.get_config(args.arch, smoke=args.smoke)
@@ -41,7 +50,19 @@ def main(argv=None):
     print(f"[serve] {cfg.name}: n_params={api.n_params_exact(cfg):,} "
           f"machine-balance n_opt={sizer.n_opt} (TPU v5e constants)")
 
-    engine = ServingEngine(cfg, params, max_len=args.max_len, max_batch=args.max_batch)
+    plan = None
+    if args.compress != "none":
+        plan = api.compress(cfg, params, PlanConfig(
+            default=args.compress, q_prune=args.q_prune,
+            bk=args.block, bn=args.block,
+        ))
+        params = plan.params
+        print(f"[serve] {plan.summary()}")
+        print(f"[serve] plan-corrected n_opt="
+              f"{plan.sizer(n_params=api.n_params_exact(cfg)).n_opt}")
+
+    engine = ServingEngine(cfg, params, max_len=args.max_len,
+                           max_batch=args.max_batch, plan=plan)
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):
         extras = {}

@@ -51,7 +51,13 @@ def run(args, cfg=None) -> dict:
         if args.mesh in ("pod", "multipod") else M.make_host_mesh()
     )
     rules = M.rules_for(cfg, None)
-    opt_cfg = O.OptimizerConfig(lr=args.lr, warmup_steps=20, decay_steps=max(100, args.steps))
+    # warmup scales with the run: a hardcoded 20-step warmup left short
+    # smoke runs entirely inside the ramp (lr ~ 0, loss never moved)
+    opt_cfg = O.OptimizerConfig(
+        lr=args.lr,
+        warmup_steps=min(20, max(1, args.steps // 4)),
+        decay_steps=max(100, args.steps),
+    )
 
     key = jax.random.key(args.seed)
     with sl.use_mesh(mesh, rules):

@@ -7,6 +7,11 @@ so the trainer / server / dry-run never branch on architecture family.
     logits, cache = api.prefill(cfg, params, batch, cache)
     logits, cache = api.decode_step(cfg, params, cache, tok, pos)
 
+``params`` everywhere may be the *compressed* pytree produced by
+``api.compress(cfg, params, plan_cfg)`` (core/weight_plan): prefill and
+decode route their matmuls through the plan dispatch, so pruned+quantized
+weights serve through the same compiled step functions as dense ones.
+
 ``input_specs`` produces ShapeDtypeStruct stand-ins for every input of the
 lowered step functions (the dry-run path: weak-type-correct, shardable, no
 device allocation).
@@ -21,9 +26,16 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import weight_plan as WP
 from repro.models import encdec as E
 from repro.models import transformer as T
 from repro.models import vlm as V
+
+
+def _compress(cfg, params, plan_cfg: WP.PlanConfig) -> WP.WeightPlan:
+    """Default compression: family-agnostic plan walk (every family's
+    matmuls already route through the plan dispatch)."""
+    return WP.compress(params, plan_cfg)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +53,9 @@ class ModelAPI:
     # prepend patch embeddings to the decoder sequence, so their KV cache
     # slots are offset by n_patches.
     prefix_len: Callable = staticmethod(lambda cfg: 0)
+    # (cfg, params, PlanConfig) -> WeightPlan whose .params is treedef-
+    # compatible with the dense pytree (prefill/decode/engine accept it).
+    compress: Callable = staticmethod(_compress)
 
 
 def _t_prefill(cfg, params, batch, cache):

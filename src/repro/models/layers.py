@@ -21,6 +21,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.weight_plan import apply_linear
+from repro.core import weight_plan as _wp
 from repro.distributed import shardlib as sl
 
 # ---------------------------------------------------------------------------
@@ -39,58 +41,28 @@ def embed_init(key, shape, dtype=jnp.float32):
 
 
 # ---------------------------------------------------------------------------
-# dense application with optional quantized weights
+# linear application — one dispatch for every weight representation
 # ---------------------------------------------------------------------------
+#
+# ``qdense`` is the historical name of the dispatch; it now routes through the
+# compressed-weight execution plan (core/weight_plan.apply_linear), so every
+# layer transparently consumes dense arrays, int8 {"q","s"} dicts, and
+# block-sparse / quant+sparse PackedLinear weights — whatever the plan
+# assigned that matmul.
 
+qdense = apply_linear
 
-def qdense(x: jax.Array, w) -> jax.Array:
-    """x @ w where w is either an array or a quantized dict
-    {"q": int8, "s": fp32 per-output-channel scales}.
-
-    The quantized path streams 1 byte/weight from HBM (the paper's
-    weight-encoding technique, Section 4.1, at int8) and dequantizes in the
-    epilogue: (x @ q) * s with f32 accumulation — scales factor out of the
-    contraction.
-    """
-    dt = x.dtype
-    if isinstance(w, dict) and "q" in w:
-        y = jax.lax.dot_general(
-            x, w["q"].astype(dt),
-            (((x.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        return (y * w["s"].astype(jnp.float32)).astype(dt)
-    return x @ w.astype(dt)
-
-
-_QUANT_KEYS = ("w", "tok", "head")  # leaves consumed by qdense/embed/unembed
+_QUANT_KEYS = _wp.QUANT_KEYS  # leaves consumed by qdense/embed/unembed
 
 
 def quantize_for_serving(params, min_size: int = 16384):
     """int8-quantize matmul weights into the {"q", "s"} form qdense consumes.
 
-    Selection is by leaf name (w*, tok, head — the qdense/embedding call
-    sites); scales reduce over the contraction axis (-2) only, so stacked
-    per-layer / per-expert weights keep independent per-(layer, channel)
-    scales and scan slicing stays aligned: q (L, d, f) pairs with s (L, f).
-    Serving b_weight drops 4 -> 1 (the paper's Section 4.1 technique).
+    Kept as the quant-everywhere special case of ``weight_plan.compress``
+    (serving b_weight drops 4 -> 1, the paper's Section 4.1 technique);
+    use a ``PlanConfig`` for the pruning-composed representations.
     """
-
-    def q(path, leaf):
-        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
-        if not (
-            hasattr(leaf, "ndim") and leaf.ndim >= 2 and leaf.size >= min_size
-            and leaf.shape[-2] >= 64  # a real contraction dim, not a stacked vector
-            and (name.startswith("w") or name in _QUANT_KEYS)
-        ):
-            return leaf
-        lf = jnp.asarray(leaf, jnp.float32)
-        amax = jnp.max(jnp.abs(lf), axis=-2, keepdims=True)
-        scales = jnp.maximum(amax, 1e-8) / 127.0
-        qv = jnp.clip(jnp.round(lf / scales), -127, 127).astype(jnp.int8)
-        return {"q": qv, "s": jnp.squeeze(scales, axis=-2)}
-
-    return jax.tree_util.tree_map_with_path(q, params)
+    return _wp.quantize_for_serving(params, min_size=min_size)
 
 
 # ---------------------------------------------------------------------------

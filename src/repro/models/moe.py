@@ -20,6 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.weight_plan import apply_linear
 from repro.distributed import shardlib as sl
 from repro.models import layers as L
 
@@ -117,26 +118,22 @@ def apply_moe(cfg, p, x: jax.Array, return_aux: bool = False):
     ).astype(dt)
 
     # (E, nG, C, d): experts over `model` (EP), token groups keep the
-    # `batch` (data) sharding — the einsum boundary is where GSPMD emits the
-    # expert-parallel all-to-all.  Annotating the group dim as batch is what
-    # keeps the buffers distributed; pinning it replicated costs a ~20 GB
-    # all-gather per layer (measured on qwen2-moe before this fix).
-    def qein(spec, x, w):
-        """Expert einsum with optional int8 weights (s per (E, out_ch))."""
-        if isinstance(w, dict):
-            y = jnp.einsum(spec, x, w["q"].astype(dt), preferred_element_type=jnp.float32)
-            return (y * w["s"][:, None, None, :].astype(jnp.float32)).astype(dt)
-        return jnp.einsum(spec, x, w.astype(dt))
-
-    # no preferred f32 here: the backward of this einsum produces the dxg
-    # partial sums that GSPMD all-reduces over `model`; keeping the einsum
-    # in compute dtype keeps that collective payload bf16.
+    # `batch` (data) sharding — the per-expert matmul boundary is where GSPMD
+    # emits the expert-parallel all-to-all.  Annotating the group dim as
+    # batch is what keeps the buffers distributed; pinning it replicated
+    # costs a ~20 GB all-gather per layer (measured on qwen2-moe before this
+    # fix).  The expert matmuls route through the weight-plan dispatch: the
+    # stacked (Ep, d, f) weights may be dense, int8, or block-sparse packed
+    # per expert — apply_linear vmaps the expert axis down to the 2-D case.
+    # no preferred f32 here: the backward of these matmuls produces the dxg
+    # partial sums that GSPMD all-reduces over `model`; keeping them in
+    # compute dtype keeps that collective payload bf16.
     xe = jnp.einsum("gtec,gtd->egcd", dispatch, xg)
     xe = sl.shard(xe, "experts", "batch", None, None)
-    h = qein("egcd,edf->egcf", xe, p["w_gate"])
-    h = L._ACT[cfg.activation](h) * qein("egcd,edf->egcf", xe, p["w_up"])
+    h = apply_linear(xe, p["w_gate"])
+    h = L._ACT[cfg.activation](h) * apply_linear(xe, p["w_up"])
     h = sl.shard(h, "experts", "batch", None, "expert_ff")
-    ye = qein("egcf,efd->egcd", h, p["w_down"])
+    ye = apply_linear(h, p["w_down"])
     ye = sl.shard(ye, "experts", "batch", None, None)
     # combine contracts over the expert-sharded axis -> GSPMD emits the
     # row-parallel all-reduce on this einsum's OUTPUT: keep it bf16 (the MXU

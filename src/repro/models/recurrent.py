@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed import shardlib as sl
+from repro.core.weight_plan import apply_linear
 from repro.models import layers as L
 from repro.models.ssm import _causal_conv
 
@@ -71,8 +72,8 @@ def apply_rglru(cfg, p, x: jax.Array, state=None):
     dt = x.dtype
     state = state or init_rglru_state(cfg, B, dt)
 
-    gate = jax.nn.gelu(L.qdense(x, p["w_gate"]))  # (B, S, w)
-    u = L.qdense(x, p["w_x"])
+    gate = jax.nn.gelu(apply_linear(x, p["w_gate"]))  # (B, S, w)
+    u = apply_linear(x, p["w_x"])
     u, conv_state = _causal_conv(u, p["conv"], state["conv"])
     uf = u.astype(jnp.float32)
 
@@ -101,5 +102,5 @@ def apply_rglru(cfg, p, x: jax.Array, state=None):
         hs = hs_all[:, 1:]
         h = hs[:, -1]
 
-    y = L.qdense(hs.astype(dt) * gate, p["w_out"])
+    y = apply_linear(hs.astype(dt) * gate, p["w_out"])
     return sl.shard(y, "batch", "seq_sp", None), {"h": h, "conv": conv_state}

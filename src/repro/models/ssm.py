@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed import shardlib as sl
+from repro.core.weight_plan import apply_linear
 from repro.models import layers as L
 
 # ---------------------------------------------------------------------------
@@ -98,14 +99,14 @@ def apply_mlstm(cfg, p, x: jax.Array, state=None, chunk: int = 64):
     dt = x.dtype
     state = state or init_mlstm_state(cfg, B, dt)
 
-    u = L.qdense(x, p["w_u"])
-    z = L.qdense(x, p["w_z"])
+    u = apply_linear(x, p["w_u"])
+    z = apply_linear(x, p["w_z"])
     uc, conv_state = _causal_conv(u, p["conv"], state["conv"])
     uc = jax.nn.silu(uc)
     q = (uc * p["s_q"].astype(dt)).reshape(B, S, H, hd)
     k = (uc * p["s_k"].astype(dt)).reshape(B, S, H, hd) / math.sqrt(hd)
     v = (u * p["s_v"].astype(dt)).reshape(B, S, H, hd)
-    gates = L.qdense(x, p["w_if"]) + p["b_if"].astype(dt)
+    gates = apply_linear(x, p["w_if"]) + p["b_if"].astype(dt)
     i_raw, f_raw = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (B, S, H)
 
     if S > 1 and not os.environ.get("REPRO_MLSTM_SEQUENTIAL"):
@@ -113,7 +114,7 @@ def apply_mlstm(cfg, p, x: jax.Array, state=None, chunk: int = 64):
             q, k, v, i_raw, f_raw,
             state["C"], state["n"], state["m"], chunk=min(chunk, S),
         )
-        y = L.qdense(h.astype(dt) * jax.nn.silu(z), p["w_down"])
+        y = apply_linear(h.astype(dt) * jax.nn.silu(z), p["w_down"])
         new_state = {"C": C, "n": n, "m": m, "conv": conv_state}
         return sl.shard(y, "batch", "seq_sp", None), new_state
 
@@ -142,7 +143,7 @@ def apply_mlstm(cfg, p, x: jax.Array, state=None, chunk: int = 64):
     )
     (C, n, m), hs = jax.lax.scan(step, (state["C"], state["n"], state["m"]), xs)
     h = hs.transpose(1, 0, 2, 3).reshape(B, S, up).astype(dt)
-    y = L.qdense(h * jax.nn.silu(z), p["w_down"])
+    y = apply_linear(h * jax.nn.silu(z), p["w_down"])
     new_state = {"C": C, "n": n, "m": m, "conv": conv_state}
     return sl.shard(y, "batch", "seq_sp", None), new_state
 
@@ -273,7 +274,7 @@ def apply_slstm(cfg, p, x: jax.Array, state=None):
     hd = d // H
     dt = x.dtype
     state = state or init_slstm_state(cfg, B, dt)
-    gates_x = (L.qdense(x, p["w_gates"]) + p["b_gates"].astype(dt)).astype(jnp.float32)
+    gates_x = (apply_linear(x, p["w_gates"]) + p["b_gates"].astype(dt)).astype(jnp.float32)
 
     def step(carry, gx_t):
         c, n, h, m = carry
@@ -296,8 +297,8 @@ def apply_slstm(cfg, p, x: jax.Array, state=None):
     )
     y = hs.transpose(1, 0, 2).astype(dt)
     # post up/down projection (gated, factor 4/3)
-    u = L.qdense(y, p["w_up"])
+    u = apply_linear(y, p["w_up"])
     a, b = jnp.split(u, 2, axis=-1)
-    y = L.qdense(jax.nn.gelu(a) * b, p["w_down"])
+    y = apply_linear(jax.nn.gelu(a) * b, p["w_down"])
     new_state = {"c": c, "n": n, "h": h, "m": m}
     return sl.shard(y, "batch", "seq_sp", None), new_state

@@ -25,6 +25,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.weight_plan import apply_linear
 from repro.distributed import shardlib as sl
 from repro.models import layers as L
 from repro.models import moe as M
@@ -216,14 +217,14 @@ def _attn_prefill(cfg, p, h, kind, base, cache):
     window = cfg.local_window if kind == "local" else None
     dt = h.dtype
     H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q = L.qdense(h, p["wq"]).reshape(B, Sq, H, hd)
-    k = L.qdense(h, p["wk"]).reshape(B, Sq, KVH, hd)
-    v = L.qdense(h, p["wv"]).reshape(B, Sq, KVH, hd)
+    q = apply_linear(h, p["wq"]).reshape(B, Sq, H, hd)
+    k = apply_linear(h, p["wk"]).reshape(B, Sq, KVH, hd)
+    v = apply_linear(h, p["wv"]).reshape(B, Sq, KVH, hd)
     positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
     q = L.apply_rope(q, positions, base)
     k = L.apply_rope(k, positions, base)
     o = L.attention(q, k, v, causal=True, window=window, softcap=cfg.logit_softcap)
-    out = L.qdense(o.reshape(B, Sq, H * hd), p["wo"])
+    out = apply_linear(o.reshape(B, Sq, H * hd), p["wo"])
     Sc = cache["k"].shape[1]
     if Sc >= Sq:
         kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, 1)

@@ -12,6 +12,13 @@ no head-of-line blocking on long generations).
 ``BatchSizer`` (core/batching.py) picks max_batch at the machine-balance
 point n_opt unless the caller overrides it, tying the serving layer to the
 paper's throughput model.
+
+``params`` may be a *compressed* pytree from ``core.weight_plan.compress``
+(int8 and/or block-sparse weights): every model matmul routes through the
+plan dispatch, so prefill and the one compiled decode step serve pruned +
+quantized weights unchanged.  Passing the ``plan`` corrects the sizer's
+machine-balance point for the shrunken weight stream — the paper's
+combined-optimization claim (batching x pruning) at the engine level.
 """
 
 from __future__ import annotations
@@ -64,17 +71,28 @@ class ServingEngine:
         max_len: int = 256,
         max_batch: Optional[int] = None,
         sizer: Optional[BatchSizer] = None,
+        plan=None,  # WeightPlan: sizes the batch for the compressed stream
         seed: int = 0,
     ):
         self.cfg = cfg
+        if plan is not None and params is None:
+            params = plan.params
         self.params = params
+        self.plan = plan
         self.api = get_api(cfg)
         self.max_len = max_len
         if max_batch is None:
             if sizer is None:
-                sizer = BatchSizer(n_params=self.api.n_params_exact(cfg))
+                if plan is not None:
+                    # pruning + quantization shrink t_mem: the plan knows the
+                    # achieved (b_weight, q_prune, q_overhead), so n_opt
+                    # lands where Section 5.6 predicts for this model.
+                    sizer = plan.sizer(n_params=self.api.n_params_exact(cfg))
+                else:
+                    sizer = BatchSizer(n_params=self.api.n_params_exact(cfg))
             max_batch = min(64, sizer.n_opt)
         self.max_batch = max_batch
+        self.sizer = sizer
         self.dtype = jnp.dtype(cfg.compute_dtype)
         # slot state (host-side)
         self.slot_req: List[Optional[Request]] = [None] * max_batch

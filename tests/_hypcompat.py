@@ -1,0 +1,31 @@
+"""Optional-``hypothesis`` shim: property tests degrade to skips when the
+package is absent, while the example-based tests in the same module still
+collect and run (a plain ``pytest.importorskip`` would drop those too).
+
+Usage in a test module:
+
+    from _hypcompat import HAVE_HYPOTHESIS, given, settings, st
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal images
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        """Accepts any strategy construction at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda fn: fn

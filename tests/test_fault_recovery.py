@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypcompat import given, settings, st  # degrades to skips without hypothesis
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import checkpoint as ckpt

@@ -14,6 +14,11 @@ from repro.training.trainer import make_train_step
 KEY = jax.random.key(0)
 
 
+# Full-model system/serving tests: the long pole of the suite (compile +
+# multi-arch sweeps).  Excluded from the fast CI lane via -m "not slow".
+pytestmark = pytest.mark.slow
+
+
 def _batch(cfg, api, B=2, S=16, seed=1):
     rng = np.random.default_rng(seed)
     toks = rng.integers(0, cfg.vocab, size=(B, S)).astype(np.int32)

@@ -3,7 +3,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypcompat import given, settings, st  # degrades to skips without hypothesis
 
 from repro.core import perf_model as pm
 

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypcompat import given, settings, st  # degrades to skips without hypothesis
 
 from repro.core import quantization as Q
 

@@ -11,6 +11,11 @@ from repro.models.api import get_api
 from repro.serving.engine import Request, ServingEngine
 
 
+# Full-model system/serving tests: the long pole of the suite (compile +
+# multi-arch sweeps).  Excluded from the fast CI lane via -m "not slow".
+pytestmark = pytest.mark.slow
+
+
 def _engine(arch="tinyllama-1.1b", max_batch=4, max_len=64):
     cfg = C.get_config(arch, smoke=True)
     api = get_api(cfg)

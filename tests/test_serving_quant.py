@@ -17,6 +17,11 @@ from repro.models import ssm as S
 from repro.models.api import get_api
 
 
+# Full-model system/serving tests: the long pole of the suite (compile +
+# multi-arch sweeps).  Excluded from the fast CI lane via -m "not slow".
+pytestmark = pytest.mark.slow
+
+
 class TestQuantizedServing:
     @pytest.mark.parametrize("arch", ["tinyllama-1.1b", "gemma3-4b", "qwen2-moe-a2.7b",
                                       "recurrentgemma-2b", "whisper-tiny"])

@@ -13,6 +13,11 @@ from repro import checkpoint as ckpt
 from repro.launch import train as train_mod
 
 
+# Full-model system/serving tests: the long pole of the suite (compile +
+# multi-arch sweeps).  Excluded from the fast CI lane via -m "not slow".
+pytestmark = pytest.mark.slow
+
+
 def _args(**kw):
     base = dict(
         arch="tinyllama-1.1b", smoke=True, steps=12, batch=4, seq=32, lr=3e-3,
