@@ -1,0 +1,122 @@
+"""Decode-step microbenchmark: step time vs q_prune and vs KV-cache dtype.
+
+The decode hot path streams two things per step: the compressed weights
+(amortized over the batch) and the KV cache (per live sequence).  This
+bench sweeps both axes on a smoke-size transformer and reports, per cell:
+
+  * measured wall time per decode step on this host (interpret-mode CPU —
+    a plumbing/relative-trend number, not TPU performance);
+  * the plan-modeled bytes/token the perf model charges
+    ((weight_bytes + B * ctx * kv_bytes) / B);
+  * HLO-measured bytes/token: the trip-count-aware byte count of the
+    compiled decode step (launch/hlo_analysis), i.e. what the program
+    actually materializes, not what the model hopes;
+  * the kv-aware machine-balance n_opt — the acceptance check that the
+    int8 cache shifts n_opt exactly where ``decode_step_time``'s two-term
+    balance predicts (the bench asserts t_calc == t_mem at n_opt).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.core import perf_model as pm
+from repro.core.weight_plan import PlanConfig
+from repro.launch import hlo_analysis
+from repro.models.api import get_api, kv_bytes_per_token
+
+from benchmarks.common import emit, time_fn
+
+ARCH = "tinyllama-1.1b"
+B = 4
+CTX = 64
+
+
+def _hlo_bytes(step_fn, *args) -> float:
+    try:
+        text = jax.jit(step_fn).lower(*args).compile().as_text()
+        return hlo_analysis.analyze(text).bytes
+    except Exception:  # noqa: BLE001 — backend text formats vary
+        return float("nan")
+
+
+def _balance_check(n_params: int, q: float, kv_tok: float) -> str:
+    """n_opt from the sizer must sit on decode_step_time's balance point."""
+    n = pm.decode_n_opt(
+        q_prune=q, b_weight=1.0, sparse_compute=True,
+        n_params=n_params, kv_bytes_per_token=kv_tok, context_len=CTX,
+    )
+    if not np.isfinite(n):
+        return "n_opt=inf(mem-bound)"
+    t = pm.decode_step_time(
+        n_params, max(1, round(n)), kv_tok, CTX, b_weight=1.0, q_prune=q,
+    )
+    ratio = t["t_calc"] / max(t["t_mem"], 1e-30)
+    return f"n_opt={n:.1f} balance={ratio:.2f}"
+
+
+def main(smoke: bool = False) -> None:
+    cfg = C.get_config(ARCH, smoke=True)
+    api = get_api(cfg)
+    params = api.init_params(cfg, jax.random.key(0))
+    n_params = api.n_params_exact(cfg)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, 8)), jnp.int32)
+    one = tokens[:, -1:]
+    pos = jnp.full((B,), 8, jnp.int32)
+    dt = jnp.dtype(cfg.compute_dtype)
+
+    q_sweep = (0.5,) if smoke else (0.0, 0.5, 0.75)
+    kv_sweep = ((None, "fp"), (jnp.int8, "int8"))  # the kv axis IS the bench
+
+    # the n_opt shift at production scale (the smoke model is kv-dominated at
+    # any batch, so its balance point is inf): a 1B-param int8-weight model
+    # with llama-1B-ish attention (22 layers, KVH=4, hd=64).  KV reads are
+    # per-sample traffic, so a heavier cache pushes the compute-bound
+    # crossover to LARGER batches; the int8 cache halves the stream and
+    # moves n_opt back toward the weight-only balance point.
+    # decode_step_time's two terms must cross exactly at the reported n_opt
+    # (balance == 1.00) — the acceptance check.
+    np_big, ctx, n_l, kvh, hd = 10**9, 128, 22, 4, 64
+    for kv_name, kv_tok in (
+        ("fp", 2.0 * kvh * hd * 2 * n_l),  # bf16 payload
+        ("int8", 2.0 * (kvh * hd + 4 * kvh) * n_l),  # int8 + fp32 scales
+    ):
+        n = pm.decode_n_opt(
+            b_weight=1.0, n_params=np_big, kv_bytes_per_token=kv_tok, context_len=ctx
+        )
+        t = pm.decode_step_time(np_big, max(1, round(n)), kv_tok, ctx, b_weight=1.0)
+        emit(
+            f"decode/nopt_shift/kv_{kv_name}", None,
+            f"n_opt={n:.1f} kv_B/tok={kv_tok:.0f} ctx={ctx} "
+            f"balance={t['t_calc'] / t['t_mem']:.2f}",
+        )
+
+    for q in q_sweep:
+        pc = PlanConfig(default="quant_sparse", q_prune=q, bk=16, bn=16, min_size=1024)
+        plan = api.compress(cfg, params, pc)
+        for kv_dtype, kv_name in kv_sweep:
+            kv_tok = kv_bytes_per_token(cfg, kv_dtype)
+            cache = api.init_cache(cfg, B, CTX, dt, kv_dtype=kv_dtype)
+            _, cache = jax.jit(functools.partial(api.prefill, cfg))(
+                plan.params, {"tokens": tokens}, cache)
+            step = jax.jit(functools.partial(api.decode_step, cfg))
+            us = time_fn(step, plan.params, cache, one, pos,
+                         warmup=1, iters=2 if smoke else 5)
+            modeled = (plan.weight_bytes + B * CTX * kv_tok) / B
+            hlo_b = _hlo_bytes(
+                functools.partial(api.decode_step, cfg), plan.params, cache, one, pos)
+            emit(
+                f"decode/q{q:.2f}/kv_{kv_name}", us,
+                f"modeled_B/tok={modeled:.0f} hlo_B/tok={hlo_b / B:.0f} "
+                f"kv_B/tok={kv_tok:.0f} {_balance_check(n_params, q, kv_tok)}",
+            )
+
+
+if __name__ == "__main__":
+    main()

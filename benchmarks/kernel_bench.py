@@ -15,32 +15,48 @@ from repro.core.sparse_format import to_block_sparse
 from repro.kernels import ops, ref
 
 
-def main():
+def main(smoke: bool = False):
     rng = np.random.default_rng(0)
-    B, K, N = 64, 512, 512
+    B, K, N = (16, 256, 256) if smoke else (64, 512, 512)
+    iters = 2 if smoke else 5
+    tf = lambda fn: time_fn(fn, warmup=1 if smoke else 2, iters=iters)
     x = jnp.asarray(rng.normal(size=(B, K)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
     b = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
 
-    emit("kernel/batched_ffn/interp", time_fn(
+    emit("kernel/batched_ffn/interp", tf(
         lambda: ops.batched_ffn(x, w, b)), f"B={B},K={K},N={N}")
-    emit("kernel/batched_ffn/oracle", time_fn(
+    emit("kernel/batched_ffn/oracle", tf(
         jax.jit(lambda: ref.batched_ffn(x, w, b))), "jnp reference")
 
     qt = quantize_int8(w, axis=-1)
     s = qt.scales.reshape(-1)
-    emit("kernel/quant_matmul/interp", time_fn(
+    emit("kernel/quant_matmul/interp", tf(
         lambda: ops.quant_matmul(x, qt.values, s)), "int8 weights")
 
     aq, wq = q78_encode(x), q78_encode(w)
-    emit("kernel/q78_matmul/interp", time_fn(lambda: ops.q78_matmul(aq, wq)),
+    emit("kernel/q78_matmul/interp", tf(lambda: ops.q78_matmul(aq, wq)),
          "bit-exact FPGA datapath")
 
-    for q in (0.0, 0.5, 0.9):
-        sp = to_block_sparse(w, q, BlockPruneConfig(bk=128, bn=128))
-        emit(f"kernel/block_sparse/q{q}", time_fn(
+    bk = 64 if smoke else 128
+    for q in ((0.5,) if smoke else (0.0, 0.5, 0.9)):
+        sp = to_block_sparse(w, q, BlockPruneConfig(bk=bk, bn=bk))
+        # ops routes concrete metadata through the multi-column walk kernel
+        emit(f"kernel/block_sparse_mc/q{q}", tf(
             lambda sp=sp: ops.block_sparse_matmul(x, sp)),
             f"payload_bytes={sp.payload_bytes():.0f}")
+        # per-column static sweep (PR-1 kernel) for comparison
+        from repro.kernels import block_sparse as _bs
+        emit(f"kernel/block_sparse_col/q{q}", tf(
+            lambda sp=sp: _bs.block_sparse_matmul(
+                x, sp, block_b=min(128, B), interpret=True)),
+            f"max_blocks={sp.max_blocks}")
+        sp2 = to_block_sparse(
+            jnp.asarray(rng.normal(size=(K, N)), jnp.float32), q,
+            BlockPruneConfig(bk=bk, bn=bk))
+        emit(f"kernel/fused_gate_up/q{q}", tf(
+            lambda sp=sp, sp2=sp2: ops.fused_gate_up(x, sp, sp2)),
+            "one launch: act(x@Wg)*(x@Wu)")
 
 
 if __name__ == "__main__":

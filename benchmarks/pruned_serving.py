@@ -50,27 +50,30 @@ def _run_engine(cfg, params, plan, max_batch: int) -> tuple[float, int]:
     return stats.decode_tokens / dt, stats.decode_tokens
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     cfg = C.get_config(ARCH, smoke=True)
     api = get_api(cfg)
     params = api.init_params(cfg, jax.random.key(0))
     n_params = api.n_params_exact(cfg)
+    q_sweep = (0.5,) if smoke else Q_SWEEP
+    batch_sweep = (2,) if smoke else BATCH_SWEEP
 
-    # dense baseline
-    for b in BATCH_SWEEP:
+    # dense baseline; bytes/tok = per-step weight stream amortized over the
+    # decode batch (the whole point of batching: reuse each streamed byte)
+    for b in batch_sweep:
         tps, _ = _run_engine(cfg, params, None, b)
         emit(f"pruned_serving/dense/b{b}", 1e6 / tps,
-             f"tok/s={tps:.1f} bytes/tok={2.0 * n_params:.0f}")
+             f"tok/s={tps:.1f} bytes/tok={2.0 * n_params / b:.0f}")
 
-    for q in Q_SWEEP:
+    for q in q_sweep:
         pc = PlanConfig(default="quant_sparse", q_prune=q, bk=16, bn=16, min_size=1024)
         plan = api.compress(cfg, params, pc)
         sizer = plan.sizer(n_params=n_params)
-        for b in BATCH_SWEEP:
+        for b in batch_sweep:
             tps, _ = _run_engine(cfg, plan.params, plan, b)
             emit(
                 f"pruned_serving/q{q:.2f}/b{b}", 1e6 / tps,
-                f"tok/s={tps:.1f} bytes/tok={plan.weight_bytes:.0f} "
+                f"tok/s={tps:.1f} bytes/tok={plan.weight_bytes / b:.0f} "
                 f"q_eff={plan.q_prune_effective:.2f} n_opt={sizer.n_opt}",
             )
 

@@ -1,16 +1,24 @@
 """Benchmark runner — one module per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [table2 table3 table4 fig7 nopt kernels roofline]
+    PYTHONPATH=src python -m benchmarks.run [--smoke] [table2 table3 ... decode]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` trims the
+heavyweight benches (any whose ``main`` accepts a ``smoke`` parameter:
+fewer sweep points, fewer timing iters); the purely analytic ones
+(table2/3/4, fig7, nopt, roofline) are already cheap and run as-is.  The
+CI fast lane runs ``--smoke`` over all benches so the perf scripts cannot
+silently rot — a new engine- or kernel-driving bench should accept
+``smoke`` or it will run full-size there.
 """
 
 from __future__ import annotations
 
+import inspect
 import sys
 import traceback
 
 from benchmarks import (
+    decode_microbench,
     fig7_latency,
     kernel_bench,
     nopt_validation,
@@ -30,17 +38,24 @@ ALL = {
     "kernels": kernel_bench.main,
     "roofline": roofline.main,
     "pruned_serving": pruned_serving.main,
+    "decode": decode_microbench.main,
 }
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(ALL)
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    which = [a for a in args if a != "--smoke"] or list(ALL)
     print("name,us_per_call,derived")
     failed = []
     for name in which:
         try:
-            ALL[name]()
-        except Exception:  # noqa: BLE001
+            fn = ALL[name]
+            kwargs = {}
+            if smoke and "smoke" in inspect.signature(fn).parameters:
+                kwargs["smoke"] = True
+            fn(**kwargs)
+        except Exception:  # noqa: BLE001 — unknown names report like failures
             traceback.print_exc()
             failed.append(name)
     if failed:

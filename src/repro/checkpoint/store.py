@@ -100,13 +100,7 @@ def restore(base: str, tree_like: Any, step: Optional[int] = None,
     each leaf is device_put accordingly (elastic re-shard onto any mesh).
     Returns (tree, metadata).
     """
-    if step is None:
-        step = latest_step(base)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint under {base}")
-    d = _step_dir(base, step)
-    with open(os.path.join(d, "MANIFEST.json")) as f:
-        manifest = json.load(f)
+    arrs, manifest = restore_flat(base, step)
     leaves_like, treedef = jax.tree_util.tree_flatten(tree_like)
     if manifest["n_leaves"] != len(leaves_like):
         raise ValueError(
@@ -116,8 +110,7 @@ def restore(base: str, tree_like: Any, step: Optional[int] = None,
         jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * len(leaves_like)
     )
     out = []
-    for i, (like, sh) in enumerate(zip(leaves_like, shard_leaves)):
-        arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+    for i, (arr, like, sh) in enumerate(zip(arrs, leaves_like, shard_leaves)):
         if tuple(arr.shape) != tuple(like.shape):
             raise ValueError(f"leaf {i}: shape {arr.shape} != expected {like.shape}")
         if sh is not None:
@@ -125,6 +118,28 @@ def restore(base: str, tree_like: Any, step: Optional[int] = None,
         else:
             out.append(jax.device_put(arr))
     return jax.tree_util.tree_unflatten(treedef, out), manifest["metadata"]
+
+
+def restore_flat(base: str, step: Optional[int] = None) -> tuple:
+    """Restore the raw flat leaves + manifest, without a ``tree_like``.
+
+    For callers that can rebuild the treedef from static metadata (e.g. the
+    weight-plan cache, whose pytree contains PackedLinear nodes that cannot
+    be eval_shape'd into existence): returns (list of np arrays in
+    tree-flatten order, manifest dict).
+    """
+    if step is None:
+        step = latest_step(base)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {base}")
+    d = _step_dir(base, step)
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    leaves = [
+        np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+        for i in range(manifest["n_leaves"])
+    ]
+    return leaves, manifest
 
 
 class AsyncCheckpointer:

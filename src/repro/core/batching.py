@@ -111,6 +111,10 @@ def throughput_samples_per_s(
 # Serving batch sizer (TPU adaptation)
 # ---------------------------------------------------------------------------
 
+# n_opt sentinel for "memory-bound at any batch" (kv stream > compute
+# budget); display layers should render this as inf, not a batch size.
+UNBOUNDED_NOPT = 1 << 20
+
 
 @dataclasses.dataclass(frozen=True)
 class BatchSizer:
@@ -133,6 +137,11 @@ class BatchSizer:
     # point) or executes them as masked zeros (t_calc dense: cheaper t_mem
     # moves n_opt down by (1 - q_prune)).  See perf_model.decode_n_opt.
     sparse_compute: bool = True
+    # per-token KV-cache read stream at the expected serving context: this
+    # is per-sample traffic that never amortizes with batching, so it tilts
+    # n_opt upward; an int8 cache halves it (perf_model.decode_n_opt).
+    kv_bytes_per_token: float = 0.0
+    context_len: int = 0
 
     @property
     def n_opt(self) -> int:
@@ -143,15 +152,28 @@ class BatchSizer:
             q_prune=self.q_prune,
             q_overhead=self.q_overhead,
             sparse_compute=self.sparse_compute,
+            n_params=self.n_params,
+            kv_bytes_per_token=self.kv_bytes_per_token,
+            context_len=self.context_len,
         )
+        if not math.isfinite(n):
+            return UNBOUNDED_NOPT  # memory-bound at any batch
         return max(1, int(round(n)))
 
-    def step_time(self, batch: int, context_len: int = 0, kv_bytes_per_token: float = 0.0) -> float:
+    @property
+    def memory_bound(self) -> bool:
+        """True when the per-token kv stream alone exceeds the compute
+        budget: decode stays memory-bound at any batch and ``n_opt`` is the
+        UNBOUNDED_NOPT sentinel, not a real balance point."""
+        return self.n_opt >= UNBOUNDED_NOPT
+
+    def step_time(self, batch: int, context_len: int | None = None,
+                  kv_bytes_per_token: float | None = None) -> float:
         return pm.decode_step_time(
             self.n_params,
             batch,
-            kv_bytes_per_token,
-            context_len,
+            self.kv_bytes_per_token if kv_bytes_per_token is None else kv_bytes_per_token,
+            self.context_len if context_len is None else context_len,
             self.peak_flops,
             self.hbm_bw,
             self.b_weight,
@@ -161,7 +183,8 @@ class BatchSizer:
             self.sparse_compute,
         )["t_proc"]
 
-    def pick(self, waiting: int, context_len: int = 0, kv_bytes_per_token: float = 0.0) -> int:
+    def pick(self, waiting: int, context_len: int | None = None,
+             kv_bytes_per_token: float | None = None) -> int:
         """Batch size for the next decode step: min(waiting, n_opt), further
         clamped so a step stays under the latency budget."""
         n = min(max(1, waiting), self.n_opt)

@@ -272,6 +272,9 @@ def decode_n_opt(
     q_prune: float = 0.0,
     q_overhead: float = 1.0,
     sparse_compute: bool = True,
+    n_params: int | None = None,
+    kv_bytes_per_token: float = 0.0,
+    context_len: int = 0,
 ) -> float:
     """Batch size at which decode flips from HBM-bound to compute-bound.
 
@@ -289,7 +292,28 @@ def decode_n_opt(
     masked-dense execution (``sparse_compute=False``) only t_mem shrinks and
     n_opt scales with (1 - q_prune): a smaller batch already saturates the
     MXU because the weight stream got cheaper but the MACs did not.
+
+    KV-cache reads are *per-sample* traffic: they scale with the batch and
+    never amortize, so they tilt the balance point upward.  Solving
+    t_calc(n) == t_mem(n) for ``decode_step_time``'s two terms:
+
+        n_opt = (W_stream / hbm_bw) / (2*P_compute/peak - ctx*kv/hbm_bw)
+
+    with W_stream = P_eff * b_weight * q_overhead.  Needs ``n_params`` and
+    ``context_len`` only when ``kv_bytes_per_token`` > 0; an int8 cache
+    halves the kv term, moving n_opt back toward the weight-only point.
+    A non-positive denominator means the per-token kv stream alone exceeds
+    the compute budget — decode stays memory-bound at any batch (inf).
     """
+    if kv_bytes_per_token > 0.0 and context_len > 0:
+        if n_params is None:
+            raise ValueError("n_params required for kv-aware n_opt")
+        eff = n_params * (1.0 - q_prune)
+        comp = eff if sparse_compute else n_params
+        denom = 2.0 * comp / peak_flops - context_len * kv_bytes_per_token / hbm_bw
+        if denom <= 0.0:
+            return float("inf")
+        return (eff * b_weight * q_overhead / hbm_bw) / denom
     n = peak_flops * b_weight * q_overhead / (2.0 * hbm_bw)
     if not sparse_compute:
         n *= 1.0 - q_prune

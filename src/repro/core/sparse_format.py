@@ -259,6 +259,87 @@ def to_block_sparse(
     )
 
 
+# ---------------------------------------------------------------------------
+# Multi-column kernel walk (PR 2): one grid step per *surviving* block
+# ---------------------------------------------------------------------------
+
+# Per-step flag bits in the walk's ``flags`` array.
+WALK_FIRST = 1  # first block of its output column: zero the accumulator
+WALK_LAST = 2  # last block of its output column: run the epilogue + write
+WALK_COMPUTE = 4  # real payload: fetch the block and MAC (clear => no-op)
+
+
+def build_walk(block_rows, counts, mb: int) -> dict:
+    """Flatten a per-column block list into the multi-column kernel's walk.
+
+    The PR-1 kernel sweeps a static ``(column, max_blocks)`` grid, so a
+    column with 2 survivors still burns ``max_blocks`` grid steps.  The walk
+    removes that slack: one entry per surviving block across *all* columns,
+    in column order, with first/last flags marking column boundaries so the
+    kernel knows when to reset and flush its accumulator.  Empty columns get
+    a single non-compute entry (FIRST|LAST) so their output block is still
+    visited and zeroed.
+
+    Returns int32 numpy arrays (host-side; the walk is static metadata built
+    at pack time, like the block list itself):
+      idx:   index into the rectangular ``(n_cols * mb, bk, bn)`` payload
+      rows:  activation row-block per step (the z_w analogue)
+      cols:  output block-column per step (non-decreasing)
+      flags: WALK_FIRST | WALK_LAST | WALK_COMPUTE bits
+    """
+    block_rows = np.asarray(block_rows)
+    counts = np.asarray(counts)
+    n_cols = counts.shape[0]
+    idx, rows, cols, flags = [], [], [], []
+    for j in range(n_cols):
+        c = int(counts[j])
+        if c == 0:
+            idx.append(j * mb)
+            rows.append(0)
+            cols.append(j)
+            flags.append(WALK_FIRST | WALK_LAST)
+            continue
+        for s in range(c):
+            idx.append(j * mb + s)
+            rows.append(int(block_rows[j, s]))
+            cols.append(j)
+            f = WALK_COMPUTE
+            if s == 0:
+                f |= WALK_FIRST
+            if s == c - 1:
+                f |= WALK_LAST
+            flags.append(f)
+    return {
+        "idx": np.asarray(idx, np.int32),
+        "rows": np.asarray(rows, np.int32),
+        "cols": np.asarray(cols, np.int32),
+        "flags": np.asarray(flags, np.int32),
+    }
+
+
+def pad_walk(walk: dict, n_to: int) -> dict:
+    """Pad a walk to ``n_to`` entries with no-op steps (flags 0) so stacked
+    slices (scan units / MoE experts) share one rectangular layout.  Padded
+    steps repeat the final entry's indices but carry no flag bits: the
+    kernel neither fetches, accumulates, nor writes on them."""
+    n = walk["idx"].shape[0]
+    if n == n_to:
+        return walk
+    assert n < n_to, (n, n_to)
+    pad = n_to - n
+
+    def rep(a, fill=None):
+        tail = np.full((pad,), a[-1] if fill is None else fill, np.int32)
+        return np.concatenate([a, tail])
+
+    return {
+        "idx": rep(walk["idx"]),
+        "rows": rep(walk["rows"]),
+        "cols": rep(walk["cols"]),
+        "flags": rep(walk["flags"], fill=0),
+    }
+
+
 def block_sparse_to_dense(s: BlockSparse) -> jax.Array:
     K, N = s.shape
     cfg = s.cfg

@@ -35,6 +35,7 @@ compute (no skipping) n_opt scales with (1 - q_prune).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Optional
 
@@ -43,7 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.pruning import BlockPruneConfig, block_mask, expand_block_mask
-from repro.core.sparse_format import BlockSparse
+from repro.core.sparse_format import BlockSparse, build_walk, pad_walk
 
 REPRS = ("dense", "quant", "block_sparse", "quant_sparse")
 
@@ -69,6 +70,12 @@ class PackedLinear:
       counts:     (n_cols,) int32        true survivor count per column
       scales:     (N,) fp32 or None      per-output-channel dequant scales
                                          (present iff kind == quant_sparse)
+      walk:       dict of (n_walk,) int32 arrays or None — the multi-column
+                  kernel's pack-time block list (sparse_format.build_walk):
+                  one entry per surviving block across all columns, so the
+                  kernel grid no longer pays max_blocks steps for short
+                  columns.  Stacked variants pad each slice's walk to a
+                  shared length with no-op steps.
 
     Stacked variants (scan units and/or MoE experts) carry the matching
     leading dims on every child; ``apply_linear`` detects that and vmaps
@@ -81,6 +88,7 @@ class PackedLinear:
     block_rows: Any
     counts: Any
     scales: Optional[Any]
+    walk: Optional[Any] = None
     # static metadata (pytree aux): per-matrix dense shape + block geometry
     kind: str = "block_sparse"
     shape: tuple = ()
@@ -107,7 +115,7 @@ class PackedLinear:
 
 jax.tree_util.register_dataclass(
     PackedLinear,
-    data_fields=["blocks", "block_rows", "counts", "scales"],
+    data_fields=["blocks", "block_rows", "counts", "scales", "walk"],
     meta_fields=["kind", "shape", "bk", "bn", "use_kernel", "interpret"],
 )
 
@@ -289,6 +297,17 @@ def pack_block_sparse(leaf, cfg: PlanConfig, quant: bool) -> PackedLinear:
                 blocks[l, j * mb + s] = payload
                 rows[l, j, s] = i
 
+    # Multi-column kernel walk (static, built once at pack time): one entry
+    # per surviving block; stacked slices padded to a shared length so scan
+    # and vmap slice the walk exactly like the payload.
+    walks = [build_walk(rows[l], counts[l], mb) for l in range(L)]
+    n_walk = max(w["idx"].shape[0] for w in walks)
+    walks = [pad_walk(w, n_walk) for w in walks]
+    walk = {
+        k: jnp.asarray(np.stack([w[k] for w in walks]).reshape(lead + (n_walk,)))
+        for k in ("idx", "rows", "cols", "flags")
+    }
+
     blocks = blocks.reshape(lead + blocks.shape[1:])
     rows = rows.reshape(lead + rows.shape[1:])
     counts = counts.reshape(lead + counts.shape[1:])
@@ -299,6 +318,7 @@ def pack_block_sparse(leaf, cfg: PlanConfig, quant: bool) -> PackedLinear:
         block_rows=jnp.asarray(rows),
         counts=jnp.asarray(counts),
         scales=None if scales is None else jnp.asarray(scales),
+        walk=walk,
         kind="quant_sparse" if quant else "block_sparse",
         shape=(K, N),
         bk=bk,
@@ -401,19 +421,57 @@ class WeightPlan:
             **kw,
         )
 
-    def summary(self) -> str:
+    @property
+    def fused_pairs(self) -> int:
+        """Gated-FFN (w_gate, w_up) pairs the fused gate+up node serves as
+        one launch: both sparse-packed, same kind and dense shape."""
+        n = 0
+        for p, l in self.leaves.items():
+            if not p.endswith("w_gate") or l.kind not in ("block_sparse", "quant_sparse"):
+                continue
+            lu = self.leaves.get(p[: -len("w_gate")] + "w_up")
+            if lu is not None and lu.kind == l.kind and lu.shape == l.shape:
+                n += 1
+        return n
+
+    def summary(
+        self,
+        *,
+        kv_bytes_per_token: float = 0.0,
+        context_len: int = 0,
+        batch: Optional[int] = None,
+    ) -> str:
+        """One coherent traffic budget, in the bytes/token units the sizer
+        consumes: the weight stream is charged once per decode step and
+        amortized over the batch; the KV stream is charged per live token.
+        ``batch`` defaults to the plan-corrected n_opt so the logged budget
+        matches what ``sizer().step_time`` would charge at the balance
+        point."""
         by_kind: dict = {}
         for l in self.leaves.values():
             agg = by_kind.setdefault(l.kind, [0, 0.0])
             agg[0] += 1
             agg[1] += l.bytes
         parts = [f"{k}:{n} ({b/1e6:.2f} MB)" for k, (n, b) in sorted(by_kind.items())]
+        from repro.core.batching import UNBOUNDED_NOPT
+
+        n = batch or self.sizer(
+            kv_bytes_per_token=kv_bytes_per_token, context_len=context_len
+        ).n_opt
+        # the UNBOUNDED_NOPT sentinel means memory-bound at any batch —
+        # render it as inf, not a batch size the reader might believe
+        n_label = "inf" if (batch is None and n >= UNBOUNDED_NOPT) else str(n)
+        w_tok = self.weight_bytes / max(1, n)
+        kv_tok = kv_bytes_per_token * context_len
         return (
             f"plan[{', '.join(parts)}] "
             f"q_prune={self.q_prune_effective:.3f} "
             f"b_weight={self.b_weight_effective:.2f} "
             f"q_overhead={self.q_overhead_effective:.4f} "
-            f"bytes/step={self.weight_bytes/1e6:.2f} MB"
+            f"fused_pairs={self.fused_pairs} "
+            f"bytes/step={self.weight_bytes/1e6:.2f} MB | "
+            f"bytes/tok@n={n_label}: weights={w_tok:.0f} kv={kv_tok:.0f} "
+            f"total={w_tok + kv_tok:.0f}"
         )
 
 
@@ -436,6 +494,139 @@ def _leaf_stats(path: str, kind: str, leaf, packed) -> LeafPlan:
     if p.scales is not None:
         meta += 4.0 * np.asarray(p.scales).size
     return LeafPlan(path, kind, shape, n, surviving, payload, meta)
+
+
+# ---------------------------------------------------------------------------
+# serve-time plan cache: persist/restore compressed pytrees (checkpoint/store)
+# ---------------------------------------------------------------------------
+
+
+def _node_meta(node) -> dict:
+    """Static reconstruction metadata for one planned node."""
+    if isinstance(node, PackedLinear):
+        return {
+            "repr": "packed",
+            "kind": node.kind,
+            "shape": list(node.shape),
+            "bk": node.bk,
+            "bn": node.bn,
+            "use_kernel": node.use_kernel,
+            "interpret": node.interpret,
+            "has_scales": node.scales is not None,
+            "has_walk": node.walk is not None,
+        }
+    if isinstance(node, dict) and "q" in node:
+        return {"repr": "quant"}
+    return {"repr": "dense"}
+
+
+def _is_plan_node(n) -> bool:
+    return isinstance(n, PackedLinear) or (isinstance(n, dict) and "q" in n)
+
+
+def _index_nodes(params) -> dict:
+    """path -> planned node (PackedLinear / quant dict / plain leaf)."""
+    out = {}
+
+    def visit(path, node):
+        out[path_str(path)] = node
+        return node
+
+    jax.tree_util.tree_map_with_path(visit, params, is_leaf=_is_plan_node)
+    return out
+
+
+def save_plan(base: str, plan: WeightPlan) -> str:
+    """Persist a compressed plan (packed pytree + reconstruction metadata)
+    via ``checkpoint.store`` so a serving engine can boot from packed
+    weights instead of re-packing at startup.  Returns the directory."""
+    from repro.checkpoint import store
+
+    metadata = {
+        "plan_cfg": {
+            **{
+                f.name: getattr(plan.cfg, f.name)
+                for f in dataclasses.fields(plan.cfg)
+                if f.name != "rules"
+            },
+            "rules": [list(r) for r in plan.cfg.rules],
+        },
+        "leaves": {
+            p: {**dataclasses.asdict(l), "shape": list(l.shape)}
+            for p, l in plan.leaves.items()
+        },
+        "packed": {p: _node_meta(n) for p, n in plan._by_path.items()},
+    }
+    return store.save(base, 0, plan.params, metadata=metadata, keep=1)
+
+
+def load_plan(base: str, dense_params) -> WeightPlan:
+    """Rebuild a WeightPlan saved by :func:`save_plan`.
+
+    ``dense_params`` supplies the pytree *structure* only (e.g. from
+    ``api.init_params``): its array leaves are replaced node-for-node with
+    the stored packed representations — no pruning/quantization runs.
+    """
+    from repro.checkpoint import store
+
+    leaves_np, manifest = store.restore_flat(base)
+    meta = manifest["metadata"]
+    cfg_d = dict(meta["plan_cfg"])
+    cfg_d["rules"] = tuple(tuple(r) for r in cfg_d["rules"])
+    cfg = PlanConfig(**cfg_d)
+
+    def skeleton(path, leaf):
+        if not hasattr(leaf, "ndim"):
+            return leaf
+        pm = meta["packed"].get(path_str(path), {"repr": "dense"})
+        if pm["repr"] == "quant":
+            return {"q": 0, "s": 0}
+        if pm["repr"] == "packed":
+            if tuple(leaf.shape[-2:]) != tuple(pm["shape"]):
+                raise ValueError(
+                    f"plan cache leaf {path_str(path)} packs dense shape "
+                    f"{tuple(pm['shape'])}, model has {tuple(leaf.shape[-2:])}"
+                )
+            return PackedLinear(
+                blocks=0,
+                block_rows=0,
+                counts=0,
+                scales=0 if pm["has_scales"] else None,
+                walk={"idx": 0, "rows": 0, "cols": 0, "flags": 0}
+                if pm["has_walk"]
+                else None,
+                kind=pm["kind"],
+                shape=tuple(pm["shape"]),
+                bk=pm["bk"],
+                bn=pm["bn"],
+                use_kernel=pm["use_kernel"],
+                interpret=pm["interpret"],
+            )
+        return leaf
+
+    skel = jax.tree_util.tree_map_with_path(skeleton, dense_params)
+    flat, treedef = jax.tree_util.tree_flatten(skel)
+    if len(flat) != manifest["n_leaves"]:
+        raise ValueError(
+            f"plan cache has {manifest['n_leaves']} leaves, model structure "
+            f"expects {len(flat)} — was it saved for a different config?"
+        )
+    if str(treedef) != manifest["treedef"]:
+        raise ValueError("plan cache treedef does not match this model's structure")
+    # dense placeholders are the model's own arrays: their stored shapes
+    # must match (catches e.g. a layer-count change that keeps the treedef)
+    for i, (ph, entry) in enumerate(zip(flat, manifest["leaves"])):
+        if hasattr(ph, "shape") and tuple(ph.shape) != tuple(entry["shape"]):
+            raise ValueError(
+                f"plan cache leaf {i} has shape {tuple(entry['shape'])}, "
+                f"model structure expects {tuple(ph.shape)}"
+            )
+    params = jax.tree_util.tree_unflatten(treedef, [jnp.asarray(a) for a in leaves_np])
+    leaves = {
+        p: LeafPlan(**{**d, "shape": tuple(d["shape"])})
+        for p, d in meta["leaves"].items()
+    }
+    return WeightPlan(cfg=cfg, leaves=leaves, params=params, _by_path=_index_nodes(params))
 
 
 def compress(params, cfg: PlanConfig = PlanConfig()) -> WeightPlan:
@@ -466,6 +657,76 @@ def compress(params, cfg: PlanConfig = PlanConfig()) -> WeightPlan:
 # ---------------------------------------------------------------------------
 # the runtime dispatch — every layer's matmuls route through here
 # ---------------------------------------------------------------------------
+
+
+# THE activation table: gated variants alias their underlying activation.
+# Single source of truth — kernels/fused_gate_up and models/layers._ACT
+# both consume this map, so a new activation lands everywhere at once.
+GATE_ACTS = {
+    "linear": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "sigmoid": jax.nn.sigmoid,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "swiglu": jax.nn.silu,
+    "geglu": jax.nn.gelu,
+    "gelu_glu": jax.nn.gelu,
+    "tanh": jnp.tanh,
+}
+_GATE_ACTS = GATE_ACTS  # internal alias (kept for call sites/tests)
+
+
+def _fusable_pair(g, u) -> bool:
+    return (
+        isinstance(g, PackedLinear)
+        and isinstance(u, PackedLinear)
+        and g.kind == u.kind
+        and g.shape == u.shape
+        and (g.bk, g.bn) == (u.bk, u.bn)
+        and (g.scales is None) == (u.scales is None)
+        and g.blocks.ndim == u.blocks.ndim
+    )
+
+
+def apply_gate_up(x: jax.Array, w_gate, w_up, activation: str = "silu") -> jax.Array:
+    """act(x @ Wg) * (x @ Wu) — the fused-pair plan node every gated FFN
+    routes through.
+
+    When both weights are block-sparse packed with matching geometry (the
+    quant_sparse pair), the whole gated projection runs as ONE kernel launch
+    (kernels/fused_gate_up): activations are streamed once, the gate never
+    round-trips HBM, and both int8 epilogues run on-chip.  Stacked pairs
+    (MoE experts, unsliced unit stacks) vmap down to the 2-D case; any other
+    representation mix falls back to two ``apply_linear`` dispatches plus
+    the elementwise gate (which XLA fuses, but as two weight streams).
+    """
+    if activation not in _GATE_ACTS:
+        raise ValueError(f"unknown gate activation {activation!r}")
+    if _fusable_pair(w_gate, w_up):
+        if w_gate.stacked:
+            return jax.vmap(
+                functools.partial(apply_gate_up, activation=activation)
+            )(x, w_gate, w_up)
+        return _apply_fused_pair(x, w_gate, w_up, activation)
+    return _GATE_ACTS[activation](apply_linear(x, w_gate)) * apply_linear(x, w_up)
+
+
+def _apply_fused_pair(x, g: PackedLinear, u: PackedLinear, activation: str):
+    K, N = g.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, K)
+    if g.use_kernel or u.use_kernel:
+        from repro.kernels import ops
+
+        y = ops.fused_gate_up(
+            x2, g.to_block_sparse(), u.to_block_sparse(),
+            gate_scales=g.scales, up_scales=u.scales,
+            activation=activation,
+            interpret=True if (g.interpret or u.interpret) else None,
+        )
+    else:
+        y = _GATE_ACTS[activation](_packed_ref_matmul(x2, g)) * _packed_ref_matmul(x2, u)
+    return y.astype(x.dtype).reshape(*lead, N)
 
 
 def apply_linear(x: jax.Array, w) -> jax.Array:
@@ -542,10 +803,13 @@ def _packed_ref_matmul(x2: jax.Array, w: PackedLinear) -> jax.Array:
 def _packed_kernel_matmul(x2: jax.Array, w: PackedLinear) -> jax.Array:
     """Pallas block-sparse kernel path: pruned blocks are never read from HBM
     and never enter the MXU (ops wrapper pads the row dim / picks interpret
-    mode off-TPU)."""
+    mode off-TPU).  With a pack-time walk the multi-column double-buffered
+    kernel runs; legacy PackedLinears without one fall back to the
+    per-column sweep."""
     from repro.kernels import ops
 
     return ops.block_sparse_matmul(
         x2, w.to_block_sparse(), scales=w.scales,
         interpret=True if w.interpret else None,
+        walk=w.walk,
     )

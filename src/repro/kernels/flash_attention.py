@@ -33,11 +33,7 @@ def _flash_kernel(
     q_ref,  # (1, block_q * G, hd)
     k_ref,  # (1, block_k, hd)
     v_ref,  # (1, block_k, hd)
-    o_ref,  # (1, block_q * G, hd)
-    m_ref,  # VMEM (block_q * G, 1)
-    l_ref,  # VMEM (block_q * G, 1)
-    acc_ref,  # VMEM (block_q * G, hd)
-    *,
+    *refs,  # [ks_ref, vs_ref], o_ref, m_ref, l_ref, acc_ref
     kv_blocks: int,
     block_q: int,
     block_k: int,
@@ -45,7 +41,16 @@ def _flash_kernel(
     causal: bool,
     window: int,
     scale: float,
+    quantized_kv: bool,
 ):
+    if quantized_kv:
+        # int8 KV cache: per-(position, head) scales ride along as
+        # (1, block_k) tiles and dequantize the loaded K/V tiles in VMEM —
+        # the HBM cache stream stays 1 byte/element.
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, acc_ref = refs
     kb = pl.program_id(2)
     qb = pl.program_id(1)
 
@@ -57,6 +62,8 @@ def _flash_kernel(
 
     q = q_ref[0].astype(jnp.float32) * scale  # (bq*G, hd)
     k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+    if quantized_kv:
+        k = k * ks_ref[...].reshape(block_k, 1).astype(jnp.float32)
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )  # (bq*G, bk)
@@ -77,10 +84,17 @@ def _flash_kernel(
     alpha = jnp.exp(m_prev - m_new)  # (bq*G, 1)
     p = jnp.exp(s - m_new)  # (bq*G, bk)
     l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)[:, None]
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-        p.astype(v_ref.dtype), v_ref[0],
-        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
-    )
+    if quantized_kv:
+        v = v_ref[0].astype(jnp.float32) * vs_ref[...].reshape(block_k, 1).astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+    else:
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0],
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+    acc_ref[...] = acc_ref[...] * alpha + pv
     m_ref[...] = m_new
 
     @pl.when(kb == kv_blocks - 1)
@@ -97,14 +111,24 @@ def flash_attention(
     window: int | None = None,
     block_q: int = 128,
     block_k: int = 128,
+    k_scale: jax.Array | None = None,  # (B, Sk, KVH): int8-KV dequant scales
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Pallas flash attention (GQA-aware).  Sq/Sk must be multiples of the
-    block sizes (ops.flash_attention pads)."""
+    block sizes (ops.flash_attention pads).
+
+    ``k_scale``/``v_scale`` select the int8-KV path: K/V are int8 payloads
+    dequantized per (position, head) *inside the tile load*, so the cache
+    crosses HBM at 1 byte/element — the serving-side kv_read halving that
+    ``perf_model.decode_step_time`` charges.
+    """
     B, Sq, H, hd = q.shape
     Sk, KVH = k.shape[1], k.shape[2]
     G = H // KVH
     assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    quantized_kv = k_scale is not None
+    assert (k_scale is None) == (v_scale is None)
     scale = 1.0 / math.sqrt(hd)
     q_blocks, kv_blocks = Sq // block_q, Sk // block_k
 
@@ -121,15 +145,25 @@ def flash_attention(
         _flash_kernel,
         kv_blocks=kv_blocks, block_q=block_q, block_k=block_k, groups=G,
         causal=causal, window=window or 0, scale=scale,
+        quantized_kv=quantized_kv,
     )
+    in_specs = [
+        pl.BlockSpec((1, block_q * G, hd), lambda bh, qb, kb: (bh, qb, 0)),
+        pl.BlockSpec((1, block_k, hd), lambda bh, qb, kb: (bh, kb, 0)),
+        pl.BlockSpec((1, block_k, hd), lambda bh, qb, kb: (bh, kb, 0)),
+    ]
+    operands = [qf, kf, vf]
+    if quantized_kv:
+        assert k_scale.shape == (B, Sk, KVH), (k_scale.shape, (B, Sk, KVH))
+        ksf = k_scale.transpose(0, 2, 1).reshape(B * KVH, Sk)
+        vsf = v_scale.transpose(0, 2, 1).reshape(B * KVH, Sk)
+        sc_spec = pl.BlockSpec((1, block_k), lambda bh, qb, kb: (bh, kb))
+        in_specs += [sc_spec, sc_spec]
+        operands += [ksf, vsf]
     of = pl.pallas_call(
         kernel,
         grid=(B * KVH, q_blocks, kv_blocks),
-        in_specs=[
-            pl.BlockSpec((1, block_q * G, hd), lambda bh, qb, kb: (bh, qb, 0)),
-            pl.BlockSpec((1, block_k, hd), lambda bh, qb, kb: (bh, kb, 0)),
-            pl.BlockSpec((1, block_k, hd), lambda bh, qb, kb: (bh, kb, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_q * G, hd), lambda bh, qb, kb: (bh, qb, 0)),
         out_shape=jax.ShapeDtypeStruct((B * KVH, Sq * G, hd), q.dtype),
         scratch_shapes=[
@@ -138,7 +172,7 @@ def flash_attention(
             pltpu.VMEM((block_q * G, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(qf, kf, vf)
+    )(*operands)
     return (
         of.reshape(B, KVH, Sq, G, hd).transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, hd)
     )

@@ -1,0 +1,181 @@
+"""Fused gate+up FFN for block-sparse (optionally int8) weights.
+
+A gated FFN (`act(x @ Wg) * (x @ Wu)`) under the PR-1 datapath launches two
+block-sparse kernels that each re-stream the activation tile from HBM and
+round-trip their (B, f) intermediate through HBM before the elementwise
+gate.  This kernel computes the whole pair in ONE launch, mirroring
+``kernels/batched_ffn.py``'s weight-stationary grid:
+
+    grid = (n_out_cols, n_batch_tiles, max_blocks)
+
+For output block-column j, step s multiplies gate block s and up block s
+into two VMEM accumulators; the epilogue on the final step dequantizes both
+(int8-scales epilogue, as in ``block_sparse``), applies the activation, and
+writes ``act(hg) * hu`` — the gate never touches HBM, which is EIE's
+keep-the-compressed-datapath-on-chip discipline applied to the FFN pair.
+
+Gate and up are pruned independently, so they carry separate block lists
+(``*_rows``/``*_counts`` scalar-prefetch operands) over a shared
+``max(mb_g, mb_u)`` sweep; each side's tail steps are skipped via its own
+count, exactly like the per-column kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sparse_format import BlockSparse
+from repro.core.weight_plan import GATE_ACTS as _ACTIVATIONS
+
+
+def _fused_kernel(
+    # scalar prefetch (SMEM): the two block lists
+    g_rows_ref,  # (n_cols * mb_g,)
+    g_counts_ref,  # (n_cols,)
+    u_rows_ref,  # (n_cols * mb_u,)
+    u_counts_ref,  # (n_cols,)
+    # array operands
+    xg_ref,  # (block_b, bk) activation tile for the gate block
+    wg_ref,  # (1, bk, bn) gate payload
+    xu_ref,  # (block_b, bk) activation tile for the up block
+    wu_ref,  # (1, bk, bn) up payload
+    *refs,  # [gs_ref, us_ref], o_ref, accg_ref, accu_ref
+    mb: int,
+    has_scales: bool,
+    activation: str,
+):
+    if has_scales:
+        gs_ref, us_ref, o_ref, accg_ref, accu_ref = refs
+    else:
+        gs_ref = us_ref = None
+        o_ref, accg_ref, accu_ref = refs
+    j = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    @pl.when(s < g_counts_ref[j])
+    def _mac_gate():
+        accg_ref[...] += jnp.dot(
+            xg_ref[...].astype(jnp.float32),
+            wg_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(s < u_counts_ref[j])
+    def _mac_up():
+        accu_ref[...] += jnp.dot(
+            xu_ref[...].astype(jnp.float32),
+            wu_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(s == mb - 1)
+    def _epilogue():
+        hg = accg_ref[...]
+        hu = accu_ref[...]
+        if has_scales:
+            hg = hg * gs_ref[...].astype(jnp.float32)
+            hu = hu * us_ref[...].astype(jnp.float32)
+        o_ref[...] = (_ACTIVATIONS[activation](hg) * hu).astype(o_ref.dtype)
+
+
+def fused_gate_up(
+    x: jax.Array,
+    gate: BlockSparse,
+    up: BlockSparse,
+    *,
+    gate_scales: jax.Array | None = None,
+    up_scales: jax.Array | None = None,
+    activation: str = "silu",
+    block_b: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = act(x @ Wg) * (x @ Wu) in one launch.  x: (B, K) -> y: (B, N).
+
+    ``gate`` and ``up`` must share the dense shape and block geometry (they
+    are the same (d, f) projection pruned independently).  Scales must be
+    given for both or neither (the quant_sparse pair).
+    """
+    B, K = x.shape
+    assert gate.shape == up.shape, (gate.shape, up.shape)
+    assert gate.cfg.bk == up.cfg.bk and gate.cfg.bn == up.cfg.bn
+    assert (gate_scales is None) == (up_scales is None)
+    Kw, N = gate.shape
+    assert K == Kw, (K, Kw)
+    assert B % block_b == 0, (B, block_b)
+    bk, bn = gate.cfg.bk, gate.cfg.bn
+    n_cols = N // bn
+    mb_g, mb_u = gate.max_blocks, up.max_blocks
+    mb = max(mb_g, mb_u)
+
+    grid = (n_cols, B // block_b, mb)
+
+    # Tail steps past a side's own list are clamped to its last slot (the
+    # MAC is skipped by the count guard; the clamp only keeps the index map
+    # in bounds when mb_g != mb_u).
+    def xg_index(j, bt, s, gr, gc, ur, uc):
+        return (bt, gr[j * mb_g + jnp.minimum(s, mb_g - 1)])
+
+    def wg_index(j, bt, s, gr, gc, ur, uc):
+        return (j * mb_g + jnp.minimum(s, mb_g - 1), 0, 0)
+
+    def xu_index(j, bt, s, gr, gc, ur, uc):
+        return (bt, ur[j * mb_u + jnp.minimum(s, mb_u - 1)])
+
+    def wu_index(j, bt, s, gr, gc, ur, uc):
+        return (j * mb_u + jnp.minimum(s, mb_u - 1), 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((block_b, bk), xg_index),
+        pl.BlockSpec((1, bk, bn), wg_index),
+        pl.BlockSpec((block_b, bk), xu_index),
+        pl.BlockSpec((1, bk, bn), wu_index),
+    ]
+    operands = [x, gate.blocks, x, up.blocks]
+    if gate_scales is not None:
+        assert gate_scales.shape == (N,) and up_scales.shape == (N,)
+        sc_index = lambda j, bt, s, gr, gc, ur, uc: (0, j)
+        in_specs += [pl.BlockSpec((1, bn), sc_index), pl.BlockSpec((1, bn), sc_index)]
+        operands += [gate_scales.reshape(1, N), up_scales.reshape(1, N)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (block_b, bn), lambda j, bt, s, gr, gc, ur, uc: (bt, j)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_b, bn), jnp.float32),
+            pltpu.VMEM((block_b, bn), jnp.float32),
+        ],
+    )
+
+    kernel = functools.partial(
+        _fused_kernel,
+        mb=mb,
+        has_scales=gate_scales is not None,
+        activation=activation,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
+        interpret=interpret,
+    )(
+        gate.block_rows.reshape(-1),
+        gate.counts,
+        up.block_rows.reshape(-1),
+        up.counts,
+        *operands,
+    )

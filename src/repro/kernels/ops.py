@@ -12,10 +12,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_format import BlockSparse
+from repro.core.sparse_format import BlockSparse, build_walk
 from repro.kernels import batched_ffn as _bffn
 from repro.kernels import block_sparse as _bs
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_gate_up as _fgu
 from repro.kernels import quant_matmul as _qmm
 
 
@@ -67,19 +68,72 @@ def block_sparse_matmul(
     scales: jax.Array | None = None,
     block_b: int = 128,
     interpret: bool | None = None,
+    walk: dict | None = None,
 ) -> jax.Array:
     """x @ W_blocksparse. Pads the batch dim only (K/N are block-aligned).
 
     ``scales`` (N,) selects the quant+sparse epilogue (int8 block payloads
     dequantized per output channel inside the kernel).
+
+    ``walk`` routes through the multi-column kernel (one grid step per
+    surviving block, double-buffered payload DMA) instead of the static
+    per-column sweep.  When absent it is built on the spot from concrete
+    metadata; inside a trace (counts are tracers) the walk cannot be
+    derived, so the per-column kernel runs — pass the pack-time walk
+    (``PackedLinear.walk``) to fuse under jit.
     """
     if interpret is None:
         interpret = not _on_tpu()
     B = x.shape[0]
     block_b = min(block_b, max(8, B))
     xp = _pad_dim(x, 0, block_b)
-    y = _bs.block_sparse_matmul(
-        xp, sparse, scales=scales, block_b=block_b, interpret=interpret
+    if walk is None and not isinstance(sparse.counts, jax.core.Tracer):
+        # the walk is pack-time-static: memoize it on the BlockSparse so
+        # repeated eager calls don't redo the host-side block loop (the
+        # plan path carries it on PackedLinear.walk instead)
+        walk = getattr(sparse, "_walk_cache", None)
+        if walk is None:
+            import numpy as _np
+
+            walk = build_walk(
+                _np.asarray(sparse.block_rows), _np.asarray(sparse.counts),
+                sparse.max_blocks,
+            )
+            sparse._walk_cache = walk
+    if walk is not None:
+        y = _bs.block_sparse_matmul_mc(
+            xp, sparse, walk, scales=scales, block_b=block_b, interpret=interpret
+        )
+    else:
+        y = _bs.block_sparse_matmul(
+            xp, sparse, scales=scales, block_b=block_b, interpret=interpret
+        )
+    return y[:B]
+
+
+def fused_gate_up(
+    x: jax.Array,
+    gate: BlockSparse,
+    up: BlockSparse,
+    gate_scales: jax.Array | None = None,
+    up_scales: jax.Array | None = None,
+    activation: str = "silu",
+    block_b: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """act(x @ Wg) * (x @ Wu) in ONE kernel launch (block-sparse pair).
+
+    Pads the batch dim only; gate/up must share shape and block geometry.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B = x.shape[0]
+    block_b = min(block_b, max(8, B))
+    xp = _pad_dim(x, 0, block_b)
+    y = _fgu.fused_gate_up(
+        xp, gate, up,
+        gate_scales=gate_scales, up_scales=up_scales,
+        activation=activation, block_b=block_b, interpret=interpret,
     )
     return y[:B]
 
@@ -124,6 +178,8 @@ def flash_attention(
     window: int | None = None,
     block_q: int = 128,
     block_k: int = 128,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Pallas flash attention; pads ragged sequence lengths.
@@ -132,6 +188,9 @@ def flash_attention(
     sliced off, padded k columns sit at positions > every real q position,
     so causal masking drops them (non-causal calls get an explicit window
     covering only real keys is NOT applied — use causal=True or pre-mask).
+
+    ``k_scale``/``v_scale`` (B, Sk, KVH) select the int8-KV path: payloads
+    are dequantized per (position, head) inside the kernel's tile loads.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -142,9 +201,13 @@ def flash_attention(
     qp = _pad_dim(q, 1, block_q)
     kp = _pad_dim(k, 1, block_k)
     vp = _pad_dim(v, 1, block_k)
+    if k_scale is not None:
+        k_scale = _pad_dim(k_scale, 1, block_k)
+        v_scale = _pad_dim(v_scale, 1, block_k)
     o = _fa.flash_attention(
         qp, kp, vp, causal=causal, window=window,
-        block_q=block_q, block_k=block_k, interpret=interpret,
+        block_q=block_q, block_k=block_k,
+        k_scale=k_scale, v_scale=v_scale, interpret=interpret,
     )
     return o[:, :Sq]
 

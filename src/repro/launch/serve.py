@@ -1,13 +1,17 @@
 """Serving driver: continuous-batching engine demo / load generator.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
-        --requests 32 --max-new 16 --compress quant_sparse --q-prune 0.5
+        --requests 32 --max-new 16 --compress quant_sparse --q-prune 0.5 \
+        --kv-dtype int8 --plan-cache /tmp/plan
 
 Reports throughput, mean batch occupancy (the realized paper-style weight
 reuse factor), and the n_opt the BatchSizer would pick on the target
 hardware.  ``--compress`` serves through a compressed-weight execution plan
 (core/weight_plan): the weight stream shrinks by quantization and/or block
 pruning and the reported n_opt moves accordingly (Section 5.6).
+``--kv-dtype int8`` serves with the quantized KV cache (halved kv_read
+stream); ``--plan-cache DIR`` persists the packed pytree so later engine
+boots skip the pack step entirely.
 """
 
 from __future__ import annotations
@@ -19,10 +23,38 @@ import jax
 import numpy as np
 
 import repro.configs as C
-from repro.core.batching import BatchSizer
-from repro.core.weight_plan import PlanConfig
-from repro.models.api import get_api
+from repro.core.batching import UNBOUNDED_NOPT, BatchSizer
+from repro.core.weight_plan import PlanConfig, load_plan, save_plan
+from repro.models.api import get_api, kv_bytes_per_token, supports_int8_kv
 from repro.serving.engine import Request, ServingEngine
+
+
+def _fmt_nopt(n: int) -> str:
+    return "inf (memory-bound at any batch)" if n >= UNBOUNDED_NOPT else str(n)
+
+
+def _build_plan(api, cfg, params, pc: PlanConfig, cache_dir: str | None):
+    """Compress (or restore) the serving plan; the cache stores the packed
+    pytree + metadata via checkpoint/store so boots skip re-packing."""
+    if cache_dir:
+        try:
+            plan = load_plan(cache_dir, params)
+            if plan.cfg == pc:
+                print(f"[serve] plan cache hit: {cache_dir}")
+                return plan
+            print("[serve] plan cache stale (config changed); re-packing")
+        except FileNotFoundError:
+            pass
+        except ValueError as e:
+            # saved for a different arch/shape: re-pack rather than abort
+            print(f"[serve] plan cache incompatible ({e}); re-packing")
+    t0 = time.time()
+    plan = api.compress(cfg, params, pc)
+    print(f"[serve] packed weights in {time.time() - t0:.2f}s")
+    if cache_dir:
+        save_plan(cache_dir, plan)
+        print(f"[serve] plan cached to {cache_dir}")
+    return plan
 
 
 def main(argv=None):
@@ -41,28 +73,46 @@ def main(argv=None):
     ap.add_argument("--q-prune", type=float, default=0.0,
                     help="block-pruned fraction for the sparse representations")
     ap.add_argument("--block", type=int, default=128, help="sparse block edge (bk=bn)")
+    ap.add_argument("--kv-dtype", default="fp", choices=("fp", "int8"),
+                    help="KV cache dtype (int8 = quantized cache, halved kv stream)")
+    ap.add_argument("--plan-cache", default=None, metavar="DIR",
+                    help="persist/restore the packed plan so engines boot "
+                         "from packed weights instead of re-packing")
     args = ap.parse_args(argv)
 
     cfg = C.get_config(args.arch, smoke=args.smoke)
     api = get_api(cfg)
     params = api.init_params(cfg, jax.random.key(args.seed))
-    sizer = BatchSizer(n_params=api.n_params_exact(cfg))
+    kv_dtype = "int8" if args.kv_dtype == "int8" else None
+    if kv_dtype and not supports_int8_kv(cfg):
+        kv_dtype = None  # engine would warn and serve fp: log the fp budget
+    kv_tok = kv_bytes_per_token(cfg, jax.numpy.int8 if kv_dtype else None,
+                                context_len=args.max_len)
+    sizer = BatchSizer(n_params=api.n_params_exact(cfg),
+                       kv_bytes_per_token=kv_tok, context_len=args.max_len)
     print(f"[serve] {cfg.name}: n_params={api.n_params_exact(cfg):,} "
-          f"machine-balance n_opt={sizer.n_opt} (TPU v5e constants)")
+          f"machine-balance n_opt={_fmt_nopt(sizer.n_opt)} (TPU v5e constants, "
+          f"kv={kv_tok:.0f} B/tok @ ctx {args.max_len})")
 
     plan = None
     if args.compress != "none":
-        plan = api.compress(cfg, params, PlanConfig(
+        plan = _build_plan(api, cfg, params, PlanConfig(
             default=args.compress, q_prune=args.q_prune,
             bk=args.block, bn=args.block,
-        ))
+        ), args.plan_cache)
         params = plan.params
-        print(f"[serve] {plan.summary()}")
-        print(f"[serve] plan-corrected n_opt="
-              f"{plan.sizer(n_params=api.n_params_exact(cfg)).n_opt}")
 
     engine = ServingEngine(cfg, params, max_len=args.max_len,
-                           max_batch=args.max_batch, plan=plan)
+                           max_batch=args.max_batch, plan=plan,
+                           kv_dtype=kv_dtype)
+    if plan is not None:
+        # one coherent traffic budget, in the bytes/token units the sizer
+        # charges at this engine's actual batch
+        print(f"[serve] {plan.summary(kv_bytes_per_token=kv_tok, context_len=args.max_len, batch=engine.max_batch)}")
+        n_corr = plan.sizer(n_params=api.n_params_exact(cfg),
+                            kv_bytes_per_token=kv_tok,
+                            context_len=args.max_len).n_opt
+        print(f"[serve] plan-corrected n_opt={_fmt_nopt(n_corr)}")
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):
         extras = {}

@@ -100,6 +100,49 @@ def get_api(cfg) -> ModelAPI:
     return _TRANSFORMER_API  # dense / moe / ssm / hybrid
 
 
+def supports_int8_kv(cfg) -> bool:
+    """Whether this family's cache actually materializes int8 KV leaves
+    when asked (encdec ignores kv_dtype) — shape-level probe, no
+    allocation.  Callers must not charge the int8 stream otherwise."""
+    api = get_api(cfg)
+    probe = jax.eval_shape(
+        functools.partial(api.init_cache, cfg, 1, 2,
+                          jnp.dtype(cfg.compute_dtype), kv_dtype=jnp.int8))
+    return any(l.dtype == jnp.int8 for l in jax.tree.leaves(probe))
+
+
+def kv_bytes_per_token(cfg, kv_dtype=None, context_len: int | None = None) -> float:
+    """HBM bytes of KV cache read per decoded token per unit of context —
+    the ``kv_bytes_per_token`` the perf model / BatchSizer charge.
+
+    Counts attention layers only (recurrent / xLSTM state is O(1) in
+    context).  ``kv_dtype=jnp.int8`` accounts the quantized cache: 1-byte
+    payloads plus one fp32 scale per (token, head) for each of K and V.
+    ``context_len`` caps sliding-window (``local``) layers at their actual
+    ring-buffer length ``cfg.local_window`` — the effective per-context-
+    token rate is scaled by window/context so that
+    rate * context_len == true bytes read per token.
+    """
+    per_kv = cfg.n_kv_heads * cfg.hd
+    if kv_dtype is not None and jnp.dtype(kv_dtype) == jnp.int8:
+        per_layer = 2.0 * (per_kv * 1 + cfg.n_kv_heads * 4)
+    else:
+        per_layer = 2.0 * per_kv * jnp.dtype(cfg.compute_dtype).itemsize
+    kinds = getattr(cfg, "layer_kinds", None)
+    if kinds is None:
+        return float(cfg.n_layers * per_layer)
+    total = 0.0
+    for k in kinds:
+        if k == "global":
+            total += per_layer
+        elif k == "local":
+            frac = 1.0
+            if context_len:
+                frac = min(context_len, cfg.local_window) / context_len
+            total += per_layer * frac
+    return float(total)
+
+
 # ---------------------------------------------------------------------------
 # ShapeDtypeStruct input specs (dry-run)
 # ---------------------------------------------------------------------------

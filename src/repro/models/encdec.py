@@ -185,9 +185,15 @@ def loss_fn(cfg, params, batch):
     return loss, {"loss": loss}
 
 
-def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16):
+def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16, kv_dtype=None):
     """Decoder self-attn KV (length) + cross K/V (n_frames), stacked over
-    decoder layers."""
+    decoder layers.
+
+    ``kv_dtype`` is accepted for API uniformity but ignored: the enc-dec
+    cross K/V is computed once per request (not a growing stream) and the
+    self-attn cache at audio decode lengths is small — the int8 cache
+    targets the long-context transformer families.
+    """
     KVH, hd = cfg.n_kv_heads, cfg.hd
     Ld = cfg.n_layers
     z = jnp.zeros((Ld, batch, length, KVH, hd), dtype)

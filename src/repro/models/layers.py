@@ -21,7 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.weight_plan import apply_linear
+from repro.core.weight_plan import apply_gate_up, apply_linear
 from repro.core import weight_plan as _wp
 from repro.distributed import shardlib as sl
 
@@ -396,6 +396,8 @@ def decode_attention(
     *,
     window: Optional[int] = None,
     softcap: float = 0.0,
+    k_scale: Optional[jax.Array] = None,  # (B, S, KVH) int8-cache dequant scales
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Single-step attention against a KV cache (one new token per sequence).
 
@@ -403,17 +405,33 @@ def decode_attention(
     absolute position p with p % S == i and p <= pos.  For a full-length
     cache (S > pos) that degenerates to slot i == position i; for a
     sliding-window cache (S == window) it is the rolling window.
+
+    ``k_scale``/``v_scale`` enable the int8 cache: payloads are int8 with
+    per-(slot, head) scales, dequantized by folding the scales into the
+    score / probability tensors — (q . k*s) == (q . k) * s and
+    p @ (v*s) == (p*s) @ v — so the int8 cache stream is read as-is and the
+    fp correction rides on the (B, KVH, G, S) intermediates.  This is the
+    portable reference path; ``kernels/flash_attention`` dequantizes the
+    same way inside its tile loads on the TPU fast path.
     """
     B, S, KVH, hd = k_cache.shape
     H = q.shape[2]
     G = H // KVH
     scale = 1.0 / math.sqrt(hd)
-    qg = q.reshape(B, KVH, G, hd).astype(k_cache.dtype)
-    # native-dtype cache operands + f32 accumulation: casting the cache
-    # would materialize (and possibly reshard) a full f32 copy in HBM.
-    s = jnp.einsum(
-        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
-    ) * scale
+    qg = q.reshape(B, KVH, G, hd)
+    if k_scale is None:
+        # native-dtype cache operands + f32 accumulation: casting the cache
+        # would materialize (and possibly reshard) a full f32 copy in HBM.
+        s = jnp.einsum(
+            "bkgd,bskd->bkgs", qg.astype(k_cache.dtype), k_cache,
+            preferred_element_type=jnp.float32,
+        ) * scale
+    else:
+        s = jnp.einsum(
+            "bkgd,bskd->bkgs", qg.astype(jnp.float32),
+            k_cache.astype(jnp.float32), preferred_element_type=jnp.float32,
+        ) * scale
+        s = s * k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
     s = _softcap(s, softcap)
     slot = jnp.arange(S)[None]  # (1, S)
     kv_pos = pos[:, None] - ((pos[:, None] - slot) % S)  # absolute pos per slot
@@ -422,10 +440,18 @@ def decode_attention(
         mask &= kv_pos > (pos[:, None] - window)
     s = jnp.where(mask[:, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum(
-        "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
-        preferred_element_type=jnp.float32,
-    )
+    if v_scale is None:
+        o = jnp.einsum(
+            "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        o = jnp.einsum(
+            "bkgs,bskd->bkgd",
+            p * v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :],
+            v_cache.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
     return o.reshape(B, 1, H, hd).astype(q.dtype)
 
 
@@ -491,6 +517,18 @@ def apply_attn(
             positions = pos[:, None]  # (B, 1)
             q = apply_rope(q, positions, base)
             k = apply_rope(k, positions, base)
+            if "k_scale" in cache:
+                # int8 cache: quantize this step's K/V per (token, head) and
+                # write payload + scale; the read side folds the scales into
+                # the attention math (decode_attention docstring).
+                k, ks = quantize_kv(k)
+                v, vs = quantize_kv(v)
+                ksc = _cache_update(cache["k_scale"], ks, pos)
+                vsc = _cache_update(cache["v_scale"], vs, pos)
+                ksc = sl.shard_pinned(ksc, "batch", "cache_seq", "kv_heads")
+                vsc = sl.shard_pinned(vsc, "batch", "cache_seq", "kv_heads")
+            else:
+                ksc = vsc = None
             kc = _cache_update(cache["k"], k, pos)
             vc = _cache_update(cache["v"], v, pos)
             # pin to the declared cache layout: any deviation makes GSPMD
@@ -498,8 +536,14 @@ def apply_attn(
             # multi-GB all-gather per decode step before this constraint)
             kc = sl.shard_pinned(kc, "batch", "cache_seq", "kv_heads", None)
             vc = sl.shard_pinned(vc, "batch", "cache_seq", "kv_heads", None)
-            o = decode_attention(q, kc, vc, pos, window=window, softcap=cfg.logit_softcap)
+            o = decode_attention(
+                q, kc, vc, pos, window=window, softcap=cfg.logit_softcap,
+                k_scale=ksc, v_scale=vsc,
+            )
             new_cache = {"k": kc, "v": vc}
+            if ksc is not None:
+                new_cache["k_scale"] = ksc
+                new_cache["v_scale"] = vsc
     o = o.reshape(B, S, H * hd)
     out = qdense(o, p["wo"])
     return sl.shard(out, "batch", "seq_sp", None), new_cache
@@ -521,14 +565,42 @@ def _cache_update(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array
     return jax.vmap(upd)(cache, new, idx)
 
 
+def quantize_kv(x: jax.Array):
+    """Per-(token, head) int8 quantization of a K or V tensor (..., hd).
+
+    Returns (int8 values, fp32 scales without the hd axis).  The scale
+    granularity matches the cache write pattern: one scale per written
+    vector, so the decode-step scatter stays a single dynamic-update per
+    leaf and the read side folds scales into the attention intermediates.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
 def init_attn_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16):
+    """KV cache for one attention layer.  ``dtype=jnp.int8`` selects the
+    quantized cache: int8 payloads + per-(slot, head) fp32 scales, halving
+    the decode-time cache read stream (the kv_read term of
+    ``perf_model.decode_step_time``)."""
     KVH, hd = cfg.n_kv_heads, cfg.hd
+    if jnp.dtype(dtype) == jnp.int8:
+        z = jnp.zeros((batch, length, KVH, hd), jnp.int8)
+        s = jnp.zeros((batch, length, KVH), jnp.float32)
+        return {"k": z, "v": z, "k_scale": s, "v_scale": s}
     z = jnp.zeros((batch, length, KVH, hd), dtype)
     return {"k": z, "v": z}
 
 
-def attn_cache_axes():
-    return {"k": ("batch", "cache_seq", "kv_heads", None), "v": ("batch", "cache_seq", "kv_heads", None)}
+def attn_cache_axes(quantized: bool = False):
+    ax = ("batch", "cache_seq", "kv_heads", None)
+    axes = {"k": ax, "v": ax}
+    if quantized:
+        axes["k_scale"] = ("batch", "cache_seq", "kv_heads")
+        axes["v_scale"] = ("batch", "cache_seq", "kv_heads")
+    return axes
 
 
 # ---------------------------------------------------------------------------
@@ -554,25 +626,19 @@ def mlp_axes(cfg):
     return a
 
 
-_ACT = {
-    "relu": lambda x: jnp.maximum(x, 0.0),
-    "gelu": jax.nn.gelu,
-    "silu": jax.nn.silu,
-    "swiglu": jax.nn.silu,
-    "geglu": jax.nn.gelu,
-    "gelu_glu": jax.nn.gelu,
-    "sigmoid": jax.nn.sigmoid,
-    "tanh": jnp.tanh,
-}
+# one activation table for the whole stack (core/weight_plan.GATE_ACTS):
+# the fused gate+up kernel, the plan dispatch, and these layers must agree
+_ACT = dict(_wp.GATE_ACTS)
 
 
 def apply_mlp(cfg, p, x):
-    dt = x.dtype
-    h = qdense(x, p["w_up"])
     if "w_gate" in p:
-        h = _ACT[cfg.activation](qdense(x, p["w_gate"])) * h
+        # fused-pair plan node: a sparse-packed (w_gate, w_up) pair runs as
+        # ONE kernel launch (act(x@Wg) * (x@Wu) never round-trips HBM);
+        # other representations fall back to two dispatches inside.
+        h = apply_gate_up(x, p["w_gate"], p["w_up"], cfg.activation)
     else:
-        h = _ACT[cfg.activation](h)
+        h = _ACT[cfg.activation](qdense(x, p["w_up"]))
     h = sl.shard(h, "batch", "seq", "ff")
     return sl.shard(qdense(h, p["w_down"]), "batch", "seq_sp", None)
 

@@ -20,7 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.weight_plan import apply_linear
+from repro.core.weight_plan import apply_gate_up, apply_linear
 from repro.distributed import shardlib as sl
 from repro.models import layers as L
 
@@ -130,8 +130,9 @@ def apply_moe(cfg, p, x: jax.Array, return_aux: bool = False):
     # compute dtype keeps that collective payload bf16.
     xe = jnp.einsum("gtec,gtd->egcd", dispatch, xg)
     xe = sl.shard(xe, "experts", "batch", None, None)
-    h = apply_linear(xe, p["w_gate"])
-    h = L._ACT[cfg.activation](h) * apply_linear(xe, p["w_up"])
+    # fused-pair plan node: sparse-packed expert (w_gate, w_up) pairs vmap
+    # down to one kernel launch per expert instead of two.
+    h = apply_gate_up(xe, p["w_gate"], p["w_up"], cfg.activation)
     h = sl.shard(h, "experts", "batch", None, "expert_ff")
     ye = apply_linear(h, p["w_down"])
     ye = sl.shard(ye, "experts", "batch", None, None)
@@ -142,7 +143,7 @@ def apply_moe(cfg, p, x: jax.Array, return_aux: bool = False):
 
     if m.n_shared_experts:
         s = p["shared"]
-        hs = L._ACT[cfg.activation](L.qdense(xg, s["w_gate"])) * L.qdense(xg, s["w_up"])
+        hs = apply_gate_up(xg, s["w_gate"], s["w_up"], cfg.activation)
         y = y + L.qdense(hs, s["w_down"])
 
     y = sl.shard(y.reshape(B, S, d), "batch", "seq_sp", None)

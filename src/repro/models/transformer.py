@@ -130,10 +130,14 @@ def layer_axes(cfg, kind: str):
     raise ValueError(kind)
 
 
-def init_layer_cache(cfg, kind: str, batch: int, length: int, dtype=jnp.bfloat16):
+def init_layer_cache(cfg, kind: str, batch: int, length: int, dtype=jnp.bfloat16,
+                     kv_dtype=None):
+    """``kv_dtype`` overrides the dtype of *attention* KV caches only
+    (``jnp.int8`` selects the quantized cache); recurrent/xLSTM states are
+    numerical integrators and always keep the compute dtype."""
     if kind in ATTN_KINDS:
         ln = min(length, cfg.local_window) if kind == "local" else length
-        return L.init_attn_cache(cfg, batch, ln, dtype)
+        return L.init_attn_cache(cfg, batch, ln, kv_dtype if kv_dtype is not None else dtype)
     if kind == "rec":
         return R.init_rglru_state(cfg, batch, dtype)
     if kind == "mlstm":
@@ -143,9 +147,9 @@ def init_layer_cache(cfg, kind: str, batch: int, length: int, dtype=jnp.bfloat16
     raise ValueError(kind)
 
 
-def layer_cache_axes(kind: str):
+def layer_cache_axes(kind: str, quantized_kv: bool = False):
     if kind in ATTN_KINDS:
-        return L.attn_cache_axes()
+        return L.attn_cache_axes(quantized_kv)
     if kind == "rec":
         return R.rglru_state_axes()
     if kind == "mlstm":
@@ -226,16 +230,26 @@ def _attn_prefill(cfg, p, h, kind, base, cache):
     o = L.attention(q, k, v, causal=True, window=window, softcap=cfg.logit_softcap)
     out = apply_linear(o.reshape(B, Sq, H * hd), p["wo"])
     Sc = cache["k"].shape[1]
-    if Sc >= Sq:
-        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, 1)
-        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, 1)
-    else:
+
+    def fill(c, new):
+        if Sc >= Sq:
+            return jax.lax.dynamic_update_slice_in_dim(c, new.astype(c.dtype), 0, 1)
         # ring buffer: keep the last Sc positions, rolled so slot = pos % Sc
-        kc = jnp.roll(k[:, -Sc:], Sq % Sc, axis=1).astype(cache["k"].dtype)
-        vc = jnp.roll(v[:, -Sc:], Sq % Sc, axis=1).astype(cache["v"].dtype)
-    kc = sl.shard_pinned(kc, "batch", "cache_seq", "kv_heads", None)
-    vc = sl.shard_pinned(vc, "batch", "cache_seq", "kv_heads", None)
-    return sl.shard(out, "batch", "seq_sp", None), {"k": kc, "v": vc}
+        return jnp.roll(new[:, -Sc:], Sq % Sc, axis=1).astype(c.dtype)
+
+    new_cache = {}
+    if "k_scale" in cache:
+        # int8 cache: quantize the whole prefill K/V per (token, head)
+        k, ks = L.quantize_kv(k)
+        v, vs = L.quantize_kv(v)
+        new_cache["k_scale"] = sl.shard_pinned(
+            fill(cache["k_scale"], ks), "batch", "cache_seq", "kv_heads")
+        new_cache["v_scale"] = sl.shard_pinned(
+            fill(cache["v_scale"], vs), "batch", "cache_seq", "kv_heads")
+    kc = sl.shard_pinned(fill(cache["k"], k), "batch", "cache_seq", "kv_heads", None)
+    vc = sl.shard_pinned(fill(cache["v"], v), "batch", "cache_seq", "kv_heads", None)
+    new_cache.update(k=kc, v=vc)
+    return sl.shard(out, "batch", "seq_sp", None), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -279,23 +293,23 @@ def param_axes(cfg):
     }
 
 
-def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16):
+def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16, kv_dtype=None):
     unit, n_units, rem = find_unit(cfg.layer_kinds)
     cache = {"unit": [], "rem": []}
     for kind in unit:
-        one = init_layer_cache(cfg, kind, batch, length, dtype)
+        one = init_layer_cache(cfg, kind, batch, length, dtype, kv_dtype)
         cache["unit"].append(
             jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_units,) + x.shape), one)
         )
     for kind, count in rem_runs(rem):
-        one = init_layer_cache(cfg, kind, batch, length, dtype)
+        one = init_layer_cache(cfg, kind, batch, length, dtype, kv_dtype)
         cache["rem"].append(
             jax.tree.map(lambda x: jnp.broadcast_to(x[None], (count,) + x.shape), one)
         )
     return cache
 
 
-def cache_axes(cfg):
+def cache_axes(cfg, quantized_kv: bool = False):
     unit, n_units, rem = find_unit(cfg.layer_kinds)
 
     def stack_axes(tree):
@@ -303,8 +317,8 @@ def cache_axes(cfg):
                             is_leaf=lambda x: isinstance(x, tuple))
 
     return {
-        "unit": [stack_axes(layer_cache_axes(k)) for k in unit],
-        "rem": [stack_axes(layer_cache_axes(k)) for k, _ in rem_runs(rem)],
+        "unit": [stack_axes(layer_cache_axes(k, quantized_kv)) for k in unit],
+        "rem": [stack_axes(layer_cache_axes(k, quantized_kv)) for k, _ in rem_runs(rem)],
     }
 
 

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batching import BatchSizer
-from repro.models.api import get_api
+from repro.models.api import get_api, kv_bytes_per_token, supports_int8_kv
 
 
 @dataclasses.dataclass
@@ -72,6 +72,7 @@ class ServingEngine:
         max_batch: Optional[int] = None,
         sizer: Optional[BatchSizer] = None,
         plan=None,  # WeightPlan: sizes the batch for the compressed stream
+        kv_dtype=None,  # "int8" / jnp.int8 selects the quantized KV cache
         seed: int = 0,
     ):
         self.cfg = cfg
@@ -81,15 +82,40 @@ class ServingEngine:
         self.plan = plan
         self.api = get_api(cfg)
         self.max_len = max_len
+        self.kv_dtype = jnp.dtype(jnp.int8) if kv_dtype in ("int8",) else (
+            jnp.dtype(kv_dtype) if kv_dtype is not None else None
+        )
+        if self.kv_dtype == jnp.dtype(jnp.int8) and not supports_int8_kv(cfg):
+            # some families ignore kv_dtype (encdec keeps an fp cache): only
+            # charge the int8 stream if the cache actually materializes one,
+            # so the sizer never models a cache that was not allocated.
+            import warnings
+
+            warnings.warn(
+                f"{cfg.name}: kv_dtype=int8 requested but the "
+                f"{cfg.family} cache does not support it; serving fp",
+                stacklevel=2)
+            self.kv_dtype = None
+        # the cache stream the sizer charges: per-token bytes at this
+        # engine's cache dtype and full context (sliding-window layers
+        # capped at their ring length) — int8 halves it, which moves n_opt
+        # exactly as perf_model.decode_n_opt predicts.
+        kv_tok = kv_bytes_per_token(cfg, self.kv_dtype, context_len=max_len)
         if max_batch is None:
             if sizer is None:
                 if plan is not None:
                     # pruning + quantization shrink t_mem: the plan knows the
                     # achieved (b_weight, q_prune, q_overhead), so n_opt
                     # lands where Section 5.6 predicts for this model.
-                    sizer = plan.sizer(n_params=self.api.n_params_exact(cfg))
+                    sizer = plan.sizer(
+                        n_params=self.api.n_params_exact(cfg),
+                        kv_bytes_per_token=kv_tok, context_len=max_len,
+                    )
                 else:
-                    sizer = BatchSizer(n_params=self.api.n_params_exact(cfg))
+                    sizer = BatchSizer(
+                        n_params=self.api.n_params_exact(cfg),
+                        kv_bytes_per_token=kv_tok, context_len=max_len,
+                    )
             max_batch = min(64, sizer.n_opt)
         self.max_batch = max_batch
         self.sizer = sizer
@@ -103,7 +129,9 @@ class ServingEngine:
         self.stats = EngineStats()
         self._rng = jax.random.key(seed)
         # one shared cache for the pool; per-slot prefill uses a batch-1 cache
-        self.cache = self.api.init_cache(cfg, max_batch, max_len, self.dtype)
+        self.cache = self.api.init_cache(
+            cfg, max_batch, max_len, self.dtype, kv_dtype=self.kv_dtype
+        )
         self._decode = jax.jit(
             functools.partial(self.api.decode_step, cfg), donate_argnums=(1,)
         )
@@ -136,7 +164,9 @@ class ServingEngine:
             req = self.queue.popleft()
             S = len(req.prompt) + self.api.prefix_len(self.cfg)
             assert S + req.max_new_tokens <= self.max_len, "request exceeds max_len"
-            cache1 = self.api.init_cache(self.cfg, 1, self.max_len, self.dtype)
+            cache1 = self.api.init_cache(
+                self.cfg, 1, self.max_len, self.dtype, kv_dtype=self.kv_dtype
+            )
             batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
             for k, v in (req.extras or {}).items():
                 batch[k] = jnp.asarray(v)[None]
