@@ -22,6 +22,7 @@ from benchmarks import (
     fig7_latency,
     kernel_bench,
     nopt_validation,
+    paged_serving,
     pruned_serving,
     roofline,
     table2_throughput,
@@ -38,6 +39,7 @@ ALL = {
     "kernels": kernel_bench.main,
     "roofline": roofline.main,
     "pruned_serving": pruned_serving.main,
+    "paged_serving": paged_serving.main,
     "decode": decode_microbench.main,
 }
 

@@ -116,6 +116,26 @@ def throughput_samples_per_s(
 UNBOUNDED_NOPT = 1 << 20
 
 
+def mean_decode_context(prompt_len: float, max_new: float) -> int:
+    """Expected KV context per decode step over a request's lifetime.
+
+    The step at position t reads t cached tokens, so a request decoding
+    ``max_new`` tokens after an ``prompt_len``-token prefill averages
+    ``prompt_len + max_new / 2`` tokens of kv_read per step.  This is the
+    ``context_len`` the paged engine charges the sizer (its pool holds
+    actual contexts, not a max_len reservation) — with the contiguous cache
+    the reservation itself is the stream, so max_len is the honest charge
+    there.  Charging the mean context shrinks the per-sample kv term, so
+    ``step_time`` stops over-billing every decode step for a max_len read
+    that never happens — the latency-clamped ``pick`` admits larger batches
+    — and n_opt relaxes back toward the weight-only balance point instead
+    of inflating (or hitting the memory-bound-at-any-batch sentinel) on
+    traffic that doesn't exist.  The pool-bytes side of the same fact lives
+    in ``perf_model.paged_pool_pages``.
+    """
+    return max(1, int(round(prompt_len + max_new / 2.0)))
+
+
 @dataclasses.dataclass(frozen=True)
 class BatchSizer:
     """Pick decode batch sizes at the machine-balance point.

@@ -320,6 +320,35 @@ def decode_n_opt(
     return n
 
 
+def pages_for_context(context_len: int, page_size: int) -> int:
+    """Pages a sequence of ``context_len`` tokens occupies in the paged KV
+    cache — the allocation unit of serving/engine.py's paged mode."""
+    if page_size < 1:
+        raise ValueError(f"page_size must be >= 1, got {page_size}")
+    return -(-context_len // page_size)
+
+
+def paged_pool_pages(
+    n_sequences: int,
+    mean_context_len: float,
+    page_size: int,
+    headroom: float = 1.1,
+) -> int:
+    """Pool capacity (pages, excluding the null page) to hold ``n_sequences``
+    concurrent sequences of ``mean_context_len`` expected tokens.
+
+    The contiguous cache reserves ``n * max_len`` tokens; the paged cache
+    charges ``n * ceil(mean_ctx / page_size)`` pages, so for the same pool
+    bytes the sustainable concurrent batch grows by ~``max_len / mean_ctx``
+    — which is why the kv term of ``decode_n_opt`` should be charged at the
+    *actual* mean context rather than max_len (docs/memory_model.md walks
+    the numbers).  ``headroom`` covers fragmentation at page granularity
+    (up to one page per sequence) and admission/completion skew.
+    """
+    per_seq = pages_for_context(int(math.ceil(mean_context_len)), page_size)
+    return int(math.ceil(n_sequences * per_seq * headroom))
+
+
 def decode_step_time(
     n_params: int,
     batch: int,

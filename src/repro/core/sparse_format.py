@@ -16,6 +16,27 @@ Two formats:
 
 The WZ codec exists for fidelity (tests assert bit-exact round trips and the
 paper's own q_overhead); the block format is what ships on the TPU datapath.
+
+Invariants:
+
+* **Rectangular payload** — ``BlockSparse.blocks`` is ``(n_cols *
+  max_blocks, bk, bn)``: column j's survivors occupy slots ``j*max_blocks
+  .. j*max_blocks + counts[j] - 1`` in list order, the tail is zero
+  padding.  ``block_rows[j, s]`` is the activation row-block of slot s
+  (the z_w analogue); entries past ``counts[j]`` are padding the kernels
+  never compute on (their grid steps are skipped via ``@pl.when``).
+* **Walk ordering** — ``build_walk`` flattens that layout in ascending
+  (column, slot) order: ``cols`` is non-decreasing, each column's entries
+  are contiguous, flagged WALK_FIRST/WALK_LAST at its boundaries (empty
+  columns get one non-compute FIRST|LAST entry so their output is still
+  zeroed).  Consumers (``kernels/block_sparse`` multi-column DMA,
+  ``kernels/fused_gate_up``) rely on this order to carry one VMEM
+  accumulator per output column; ``pad_walk`` appends flag-0 no-ops and
+  never reorders.
+* **Shape preservation** — pack/unpack round-trips the dense shape: K, N
+  are multiples of (bk, bn) by construction, and ``to_dense`` of a packed
+  matrix equals the masked-dense original exactly (asserted in
+  tests/test_sparse_format.py).
 """
 
 from __future__ import annotations

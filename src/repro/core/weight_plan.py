@@ -30,6 +30,28 @@ Stats from the plan (surviving weights, payload/metadata bytes) feed
 with a kernel that skips pruned blocks both t_calc and t_mem scale with
 (1 - q_prune) and n_opt depends only on q_overhead; with masked-dense
 compute (no skipping) n_opt scales with (1 - q_prune).
+
+Invariants (counted on by the engine, the kernels, and the plan cache):
+
+* **Dense-treedef preservation** — ``compress(params, ...)`` returns a
+  pytree with exactly the dense treedef shape: leaves become
+  ``PackedLinear`` nodes or ``{"q", "s"}`` dicts in place, nothing is
+  added, removed, or reordered.  This is what lets the packed pytree scan
+  / vmap / jit / donate through the unchanged model code, keeps the
+  serving engine at ONE compiled decode step, and makes
+  ``save_plan``/``load_plan`` a flat-leaf round trip.
+* **Walk ordering** — ``PackedLinear.walk`` enumerates surviving blocks in
+  ascending (block_column j, list_position s) order with payload index
+  ``j * max_blocks + s`` into the rectangular ``BlockSparse`` block array
+  (see core/sparse_format.py): ``cols`` is non-decreasing and every
+  column's entries are contiguous.  The multi-column kernel's
+  double-buffered DMA and the WALK_FIRST/WALK_LAST accumulator flags
+  assume this order; ``pad_walk`` may append no-op entries but never
+  reorders.
+* **Stacked leaves** — scan-unit / MoE-expert stacking adds leading batch
+  dims to a packed leaf; ``apply_linear`` vmaps them down to the 2-D case,
+  so pack-time geometry (bk, bn, max_blocks, walk length) is uniform
+  across the stack.
 """
 
 from __future__ import annotations

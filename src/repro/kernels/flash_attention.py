@@ -176,3 +176,163 @@ def flash_attention(
     return (
         of.reshape(B, KVH, Sq, G, hd).transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, hd)
     )
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention: K/V tiles fetched via page-table indirection
+# ---------------------------------------------------------------------------
+#
+# The decode-time analogue of the block-sparse walk: the page table is a
+# scalar-prefetch operand (SMEM, available before the grid runs), so each
+# grid step's BlockSpec index_map computes the *physical* page to DMA from
+# the logical (sequence, page) coordinate — the offset-calculation IP of the
+# paper's sparse stream, applied to the KV cache.  Only the pages a sequence
+# actually owns cross HBM; the pure-JAX reference (models/layers.
+# paged_decode_attention) materializes the same gather per step instead.
+
+
+def _paged_decode_kernel(
+    pt_ref,  # (B * P,) scalar prefetch: flattened page table
+    pos_ref,  # (B,)    scalar prefetch: per-sequence decode position
+    q_ref,  # (1, G, hd)
+    k_ref,  # (1, ps, 1, hd) one physical page, one kv head
+    v_ref,
+    *refs,  # [ks_ref (1, ps, 1), vs_ref], o_ref, m_ref, l_ref, acc_ref
+    pages_per_seq: int,
+    page_size: int,
+    kv_heads: int,
+    window: int,
+    scale: float,
+    softcap: float,
+    quantized_kv: bool,
+):
+    if quantized_kv:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, acc_ref = refs
+    p = pl.program_id(1)
+    b = pl.program_id(0) // kv_heads
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (ps, hd)
+    if quantized_kv:
+        k = k * ks_ref[0].reshape(page_size, 1).astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (G, ps)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+
+    pos = pos_ref[b]
+    kv_pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    # logical-position masking: entries beyond pos — including every slot of
+    # logical pages the sequence has not reached (their table entries point
+    # at the null page) — never contribute.
+    mask = kv_pos <= pos
+    if window > 0:
+        mask &= kv_pos > pos - window
+    s = jnp.where(mask, s, -1e30)
+
+    m_prev = m_ref[...]  # (G, 1)
+    m_new = jnp.maximum(m_prev[:, 0], s.max(axis=1))[:, None]
+    alpha = jnp.exp(m_prev - m_new)
+    pexp = jnp.exp(s - m_new)  # (G, ps)
+    l_ref[...] = l_ref[...] * alpha + pexp.sum(axis=1)[:, None]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    if quantized_kv:
+        v = v * vs_ref[0].reshape(page_size, 1).astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        pexp, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(p == pages_per_seq - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_pages: jax.Array,  # (num_pages, page_size, KVH, hd)
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, pages_per_seq) int32
+    pos: jax.Array,  # (B,) int32
+    *,
+    window: int | None = None,
+    softcap: float = 0.0,
+    k_scale_pages: jax.Array | None = None,  # (num_pages, page_size, KVH)
+    v_scale_pages: jax.Array | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """One decode step of attention against the paged KV cache.
+
+    Grid (B * KVH, pages_per_seq), pages innermost: the online-softmax
+    (m, l, acc) statistics live in VMEM scratch across each sequence's page
+    sweep, and the K/V page for step (bh, p) is addressed through the
+    prefetched page table — pages a sequence doesn't own are never fetched
+    into VMEM (the null page rides on masked positions only).  The int8
+    scale pools select dequant-on-load, mirroring the contiguous kernel.
+    """
+    B, _, H, hd = q.shape
+    num_pages, page_size, KVH, _ = k_pages.shape
+    P = page_table.shape[1]
+    G = H // KVH
+    quantized_kv = k_scale_pages is not None
+    assert (k_scale_pages is None) == (v_scale_pages is None)
+    scale = 1.0 / math.sqrt(hd)
+
+    qf = q[:, 0].reshape(B, KVH, G, hd).reshape(B * KVH, G, hd)
+    pt_flat = page_table.reshape(-1).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_decode_kernel,
+        pages_per_seq=P, page_size=page_size, kv_heads=KVH,
+        window=window or 0, scale=scale, softcap=softcap,
+        quantized_kv=quantized_kv,
+    )
+
+    def q_index(bh, p, pt, pos_s):
+        return (bh, 0, 0)
+
+    def kv_index(bh, p, pt, pos_s):
+        return (pt[(bh // KVH) * P + p], 0, bh % KVH, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, G, hd), q_index),
+        pl.BlockSpec((1, page_size, 1, hd), kv_index),
+        pl.BlockSpec((1, page_size, 1, hd), kv_index),
+    ]
+    operands = [qf, k_pages, v_pages]
+    if quantized_kv:
+        def sc_index(bh, p, pt, pos_s):
+            return (pt[(bh // KVH) * P + p], 0, bh % KVH)
+
+        sc_spec = pl.BlockSpec((1, page_size, 1), sc_index)
+        in_specs += [sc_spec, sc_spec]
+        operands += [k_scale_pages, v_scale_pages]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * KVH, P),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, G, hd), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    of = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KVH, G, hd), q.dtype),
+        interpret=interpret,
+    )(pt_flat, pos.astype(jnp.int32), *operands)
+    return of.reshape(B, KVH, G, hd).reshape(B, 1, H, hd)

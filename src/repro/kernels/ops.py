@@ -212,6 +212,34 @@ def flash_attention(
     return o[:, :Sq]
 
 
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "interpret"))
+def paged_decode_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    pos: jax.Array,
+    window: int | None = None,
+    softcap: float = 0.0,
+    k_scale_pages: jax.Array | None = None,
+    v_scale_pages: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One decode step against the paged KV cache, K/V fetched page-by-page
+    through the page table (scalar-prefetch indirection — no materialized
+    gather).  ``k_scale_pages``/``v_scale_pages`` select the int8 pools with
+    dequant-on-load.  No padding needed: page geometry is static.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _fa.paged_decode_attention(
+        q, k_pages, v_pages, page_table, pos,
+        window=window, softcap=softcap,
+        k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+        interpret=interpret,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "block_n", "block_k", "interpret"))
 def q78_matmul(
     a_q: jax.Array,

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
         --requests 32 --max-new 16 --compress quant_sparse --q-prune 0.5 \
-        --kv-dtype int8 --plan-cache /tmp/plan
+        --kv-dtype int8 --page-size 16 --share-prefix --plan-cache /tmp/plan
 
 Reports throughput, mean batch occupancy (the realized paper-style weight
 reuse factor), and the n_opt the BatchSizer would pick on the target
@@ -10,8 +10,11 @@ hardware.  ``--compress`` serves through a compressed-weight execution plan
 (core/weight_plan): the weight stream shrinks by quantization and/or block
 pruning and the reported n_opt moves accordingly (Section 5.6).
 ``--kv-dtype int8`` serves with the quantized KV cache (halved kv_read
-stream); ``--plan-cache DIR`` persists the packed pytree so later engine
-boots skip the pack step entirely.
+stream); ``--page-size N`` serves with the paged KV cache (pool of N-token
+pages + page table instead of a max_len reservation per slot; ``--pool-pages``
+caps the pool, ``--share-prefix`` maps common prompt prefixes copy-on-write);
+``--plan-cache DIR`` persists the packed pytree so later engine boots skip
+the pack step entirely.
 """
 
 from __future__ import annotations
@@ -23,9 +26,15 @@ import jax
 import numpy as np
 
 import repro.configs as C
-from repro.core.batching import UNBOUNDED_NOPT, BatchSizer
+from repro.core.batching import UNBOUNDED_NOPT, BatchSizer, mean_decode_context
+from repro.core.perf_model import paged_pool_pages
 from repro.core.weight_plan import PlanConfig, load_plan, save_plan
-from repro.models.api import get_api, kv_bytes_per_token, supports_int8_kv
+from repro.models.api import (
+    get_api,
+    kv_bytes_per_token,
+    supports_int8_kv,
+    supports_paged_kv,
+)
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -75,6 +84,17 @@ def main(argv=None):
     ap.add_argument("--block", type=int, default=128, help="sparse block edge (bk=bn)")
     ap.add_argument("--kv-dtype", default="fp", choices=("fp", "int8"),
                     help="KV cache dtype (int8 = quantized cache, halved kv stream)")
+    ap.add_argument("--page-size", type=int, default=0, metavar="N",
+                    help="serve with the paged KV cache: pool of N-token "
+                         "pages + per-sequence page table (0 = contiguous "
+                         "max_len reservation per slot)")
+    ap.add_argument("--pool-pages", type=int, default=0, metavar="P",
+                    help="paged pool capacity in pages (0 = size for the "
+                         "workload via perf_model.paged_pool_pages: max_batch "
+                         "sequences at the actual prompt+max_new context)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="paged mode: map common prompt prefixes to shared "
+                         "physical pages (copy-on-write)")
     ap.add_argument("--plan-cache", default=None, metavar="DIR",
                     help="persist/restore the packed plan so engines boot "
                          "from packed weights instead of re-packing")
@@ -86,13 +106,19 @@ def main(argv=None):
     kv_dtype = "int8" if args.kv_dtype == "int8" else None
     if kv_dtype and not supports_int8_kv(cfg):
         kv_dtype = None  # engine would warn and serve fp: log the fp budget
+    paged = args.page_size > 0 and supports_paged_kv(cfg)
+    # contiguous mode reads the whole max_len reservation (ring length);
+    # paged mode reads only what a request wrote: charge the sizer's kv
+    # term with the workload's actual mean context.
+    ctx = (mean_decode_context(args.prompt_len + api.prefix_len(cfg), args.max_new)
+           if paged else args.max_len)
     kv_tok = kv_bytes_per_token(cfg, jax.numpy.int8 if kv_dtype else None,
-                                context_len=args.max_len)
+                                context_len=ctx)
     sizer = BatchSizer(n_params=api.n_params_exact(cfg),
-                       kv_bytes_per_token=kv_tok, context_len=args.max_len)
+                       kv_bytes_per_token=kv_tok, context_len=ctx)
     print(f"[serve] {cfg.name}: n_params={api.n_params_exact(cfg):,} "
           f"machine-balance n_opt={_fmt_nopt(sizer.n_opt)} (TPU v5e constants, "
-          f"kv={kv_tok:.0f} B/tok @ ctx {args.max_len})")
+          f"kv={kv_tok:.0f} B/tok @ ctx {ctx})")
 
     plan = None
     if args.compress != "none":
@@ -102,9 +128,27 @@ def main(argv=None):
         ), args.plan_cache)
         params = plan.params
 
+    pool_pages = args.pool_pages
+    if paged and not pool_pages:
+        # size the pool for the workload, not for max_len: max_batch
+        # concurrent sequences at their *allocated* context (admission
+        # charges the full S + max_new, unlike the sizer's per-step mean)
+        pool_pages = 1 + paged_pool_pages(
+            args.max_batch, args.prompt_len + api.prefix_len(cfg) + args.max_new,
+            args.page_size)
     engine = ServingEngine(cfg, params, max_len=args.max_len,
                            max_batch=args.max_batch, plan=plan,
-                           kv_dtype=kv_dtype)
+                           kv_dtype=kv_dtype,
+                           page_size=args.page_size or None,
+                           num_pages=pool_pages or None,
+                           share_prefix=args.share_prefix,
+                           expected_context=ctx if paged else None)
+    if engine.paged:
+        print(f"[serve] paged KV cache: {engine.num_pages} pages x "
+              f"{engine.page_size} tok (pool "
+              f"{engine.num_pages * engine.page_size} tok vs contiguous "
+              f"reservation {engine.max_batch * args.max_len} tok), "
+              f"prefix sharing {'on' if args.share_prefix else 'off'}")
     if plan is not None:
         # one coherent traffic budget, in the bytes/token units the sizer
         # charges at this engine's actual batch
@@ -133,6 +177,11 @@ def main(argv=None):
           f"decode steps {stats.decode_steps}, tokens {stats.decode_tokens}, "
           f"mean batch {stats.mean_batch:.2f} "
           f"({stats.decode_tokens/max(dt,1e-9):.1f} tok/s on this host)")
+    if engine.paged:
+        print(f"[serve] paged: mean admitted context {stats.mean_context:.1f} "
+              f"tok (sizer charged ctx {ctx}), "
+              f"{stats.pages_shared} prefix pages shared, "
+              f"{stats.cow_copies} copy-on-write copies")
 
 
 if __name__ == "__main__":

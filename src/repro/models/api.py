@@ -111,6 +111,18 @@ def supports_int8_kv(cfg) -> bool:
     return any(l.dtype == jnp.int8 for l in jax.tree.leaves(probe))
 
 
+def supports_paged_kv(cfg) -> bool:
+    """Whether this family serves through the paged KV cache.  The decoder-
+    only transformer stack (dense / moe / ssm / hybrid) threads the page
+    table through its decode step; VLM/enc-dec decoders and attention-free
+    stacks (pure recurrent/xLSTM) don't — the engine falls back to the
+    contiguous per-slot cache for them."""
+    if get_api(cfg) is not _TRANSFORMER_API:
+        return False
+    kinds = getattr(cfg, "layer_kinds", ()) or ()
+    return "global" in kinds
+
+
 def kv_bytes_per_token(cfg, kv_dtype=None, context_len: int | None = None) -> float:
     """HBM bytes of KV cache read per decoded token per unit of context —
     the ``kv_bytes_per_token`` the perf model / BatchSizer charge.

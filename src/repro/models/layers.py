@@ -485,10 +485,13 @@ def apply_attn(
     cache: Optional[dict] = None,  # {"k": (B,S,KVH,hd), "v": ..., } decode path
     pos: Optional[jax.Array] = None,  # (B,) decode positions
     cross_kv: Optional[tuple] = None,  # (k, v) for cross-attention
+    page_table: Optional[jax.Array] = None,  # (B, P) paged-cache indirection
 ):
     """Returns (out, new_cache).  Three modes:
     - training/prefill (cache None): full/local causal attention over x;
     - decode (cache given): write new token kv at pos, attend to cache;
+      a paged cache ({"k_pages", ...} + ``page_table``) routes through the
+      page-table scatter/gather instead of the contiguous ring buffer;
     - cross (cross_kv given): encoder-decoder cross attention (no mask).
     """
     B, S, d = x.shape
@@ -513,6 +516,29 @@ def apply_attn(
             k = apply_rope(k, positions, base)
             o = attention(q, k, v, causal=True, window=window, softcap=cfg.logit_softcap)
             new_cache = None
+        elif "k_pages" in cache:
+            # paged decode: scatter this step's K/V through the page table,
+            # then attend via the gather reference (kernels/flash_attention
+            # has the indirection kernel that skips the materialized gather).
+            positions = pos[:, None]
+            q = apply_rope(q, positions, base)
+            k = apply_rope(k, positions, base)
+            new_cache = dict(cache)
+            if "k_scale_pages" in cache:
+                k, ks = quantize_kv(k)
+                v, vs = quantize_kv(v)
+                new_cache["k_scale_pages"] = paged_cache_update(
+                    cache["k_scale_pages"], ks, page_table, pos)
+                new_cache["v_scale_pages"] = paged_cache_update(
+                    cache["v_scale_pages"], vs, page_table, pos)
+            new_cache["k_pages"] = paged_cache_update(cache["k_pages"], k, page_table, pos)
+            new_cache["v_pages"] = paged_cache_update(cache["v_pages"], v, page_table, pos)
+            o = paged_decode_attention(
+                q, new_cache["k_pages"], new_cache["v_pages"], page_table, pos,
+                window=window, softcap=cfg.logit_softcap,
+                k_scale_pages=new_cache.get("k_scale_pages"),
+                v_scale_pages=new_cache.get("v_scale_pages"),
+            )
         else:
             positions = pos[:, None]  # (B, 1)
             q = apply_rope(q, positions, base)
@@ -601,6 +627,124 @@ def attn_cache_axes(quantized: bool = False):
         axes["k_scale"] = ("batch", "cache_seq", "kv_heads")
         axes["v_scale"] = ("batch", "cache_seq", "kv_heads")
     return axes
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (global pool of fixed-size pages + per-sequence page table)
+# ---------------------------------------------------------------------------
+#
+# Layout: pools are (num_pages, page_size, KVH, hd) per layer — the batch
+# axis is gone; sequences own *pages*, assigned by the host-side allocator
+# (serving/paged.py), and the int32 page table (B, pages_per_seq) maps each
+# slot's logical page index to a physical page.  Logical addressing is
+# position-identity (position p lives at page p // ps, slot p % ps): no ring
+# semantics, because capacity is managed by allocation, not wraparound.
+# Physical page 0 is the null page — free slots point at it so dead-slot
+# scatters in the one compiled decode step are harmless.
+
+
+def init_paged_attn_cache(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16):
+    """Paged KV pools for one attention layer.  ``dtype=jnp.int8`` selects
+    the quantized pools: int8 payloads + per-(slot, head) fp32 scale pools,
+    composing the paged layout with the halved int8 cache stream."""
+    KVH, hd = cfg.n_kv_heads, cfg.hd
+    if jnp.dtype(dtype) == jnp.int8:
+        z = jnp.zeros((num_pages, page_size, KVH, hd), jnp.int8)
+        s = jnp.zeros((num_pages, page_size, KVH), jnp.float32)
+        return {"k_pages": z, "v_pages": z, "k_scale_pages": s, "v_scale_pages": s}
+    z = jnp.zeros((num_pages, page_size, KVH, hd), dtype)
+    return {"k_pages": z, "v_pages": z}
+
+
+def paged_attn_cache_axes(quantized: bool = False):
+    # pools have no batch axis; keep heads on the kv_heads mesh axis and
+    # leave the page axes replicated (sharded paged serving is open work)
+    ax = (None, None, "kv_heads", None)
+    axes = {"k_pages": ax, "v_pages": ax}
+    if quantized:
+        axes["k_scale_pages"] = (None, None, "kv_heads")
+        axes["v_scale_pages"] = (None, None, "kv_heads")
+    return axes
+
+
+def paged_cache_update(
+    pool: jax.Array,  # (num_pages, page_size, ...) K/V or scale pool
+    new: jax.Array,  # (B, 1, ...) this step's entries
+    page_table: jax.Array,  # (B, pages_per_seq) int32
+    pos: jax.Array,  # (B,) absolute positions being written
+) -> jax.Array:
+    """Scatter one new entry per sequence through the page table.
+
+    The target page must be privately owned (refcount 1) — the engine
+    guarantees it via copy-on-write before the step.  Dead slots have their
+    table rows pointed at the null page; their scatters collide there and
+    write garbage nobody reads.
+    """
+    page_size = pool.shape[1]
+    B = new.shape[0]
+    phys = page_table[jnp.arange(B), pos // page_size]
+    return pool.at[phys, pos % page_size].set(new[:, 0].astype(pool.dtype))
+
+
+def gather_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """(num_pages, ps, ...) pool -> (B, pages_per_seq * ps, ...) view of each
+    sequence's logical cache, via the page table."""
+    g = pool[page_table]  # (B, P, ps, ...)
+    B, P, ps = g.shape[:3]
+    return g.reshape((B, P * ps) + g.shape[3:])
+
+
+def paged_decode_attention(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_pages: jax.Array,  # (num_pages, ps, KVH, hd)
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, pages_per_seq) int32
+    pos: jax.Array,  # (B,)
+    *,
+    window: Optional[int] = None,
+    softcap: float = 0.0,
+    k_scale_pages: Optional[jax.Array] = None,  # (num_pages, ps, KVH)
+    v_scale_pages: Optional[jax.Array] = None,
+    use_kernel: Optional[bool] = None,  # None = kernel on TPU, gather elsewhere
+) -> jax.Array:
+    """Single-step attention through the page table.
+
+    Two numerically-matching datapaths (parity in tests/test_paged_cache.py):
+
+    * **gather reference** (portable pure JAX): gather the sequence's pages
+      into a contiguous (B, L, KVH, hd) view and run ``decode_attention``.
+      L = pages_per_seq * page_size always exceeds ``pos`` (the table
+      covers the logical context cap), so the ring-buffer masking
+      degenerates to position identity and results are bit-identical to
+      the contiguous cache.  The gather materializes the full logical
+      context per step — fine off-TPU, wasteful on it.
+    * **Pallas kernel** (``kernels/flash_attention.paged_decode_attention``):
+      K/V tiles are fetched page-by-page via scalar-prefetch indirection
+      with int8 dequant-on-load; only owned pages cross HBM.
+
+    ``use_kernel=None`` picks the kernel on the TPU backend and the gather
+    reference elsewhere (interpret-mode Pallas would be far slower than the
+    gather for CPU serving ticks); pass True/False to force either.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels import ops  # deferred: models stay importable solo
+
+        return ops.paged_decode_attention(
+            q, k_pages, v_pages, page_table, pos,
+            window=window, softcap=softcap,
+            k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+        )
+    kc = gather_pages(k_pages, page_table)
+    vc = gather_pages(v_pages, page_table)
+    ksc = vsc = None
+    if k_scale_pages is not None:
+        ksc = gather_pages(k_scale_pages, page_table)
+        vsc = gather_pages(v_scale_pages, page_table)
+    return decode_attention(
+        q, kc, vc, pos, window=window, softcap=softcap, k_scale=ksc, v_scale=vsc
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -131,11 +131,21 @@ def layer_axes(cfg, kind: str):
 
 
 def init_layer_cache(cfg, kind: str, batch: int, length: int, dtype=jnp.bfloat16,
-                     kv_dtype=None):
+                     kv_dtype=None, page_size=None, num_pages=None):
     """``kv_dtype`` overrides the dtype of *attention* KV caches only
     (``jnp.int8`` selects the quantized cache); recurrent/xLSTM states are
-    numerical integrators and always keep the compute dtype."""
+    numerical integrators and always keep the compute dtype.
+
+    ``page_size``/``num_pages`` select the paged cache for ``global``
+    attention layers: a pool of pages shared by all sequences instead of a
+    per-slot ``length`` reservation.  ``local`` layers keep their
+    contiguous ring buffer — the window already bounds them at O(window),
+    which is exactly what paging would buy."""
     if kind in ATTN_KINDS:
+        if page_size is not None and kind == "global":
+            return L.init_paged_attn_cache(
+                cfg, num_pages, page_size, kv_dtype if kv_dtype is not None else dtype
+            )
         ln = min(length, cfg.local_window) if kind == "local" else length
         return L.init_attn_cache(cfg, batch, ln, kv_dtype if kv_dtype is not None else dtype)
     if kind == "rec":
@@ -147,8 +157,10 @@ def init_layer_cache(cfg, kind: str, batch: int, length: int, dtype=jnp.bfloat16
     raise ValueError(kind)
 
 
-def layer_cache_axes(kind: str, quantized_kv: bool = False):
+def layer_cache_axes(kind: str, quantized_kv: bool = False, paged: bool = False):
     if kind in ATTN_KINDS:
+        if paged and kind == "global":
+            return L.paged_attn_cache_axes(quantized_kv)
         return L.attn_cache_axes(quantized_kv)
     if kind == "rec":
         return R.rglru_state_axes()
@@ -159,7 +171,8 @@ def layer_cache_axes(kind: str, quantized_kv: bool = False):
     raise ValueError(kind)
 
 
-def apply_layer(cfg, kind: str, p, x, *, mode: str, cache=None, pos=None):
+def apply_layer(cfg, kind: str, p, x, *, mode: str, cache=None, pos=None,
+                page_table=None):
     """Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind in ATTN_KINDS:
@@ -177,7 +190,8 @@ def apply_layer(cfg, kind: str, p, x, *, mode: str, cache=None, pos=None):
         h = sl.shard_pinned(h, "batch", "seq", None)
         if mode == "decode":
             a, cache_a = L.apply_attn(
-                cfg, p["attn"], h, kind=kind, rope_base=base, cache=cache, pos=pos
+                cfg, p["attn"], h, kind=kind, rope_base=base, cache=cache, pos=pos,
+                page_table=page_table,
             )
         elif mode == "prefill":
             a, cache_a = _attn_prefill(cfg, p["attn"], h, kind, base, cache)
@@ -293,38 +307,60 @@ def param_axes(cfg):
     }
 
 
-def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16, kv_dtype=None):
+def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16, kv_dtype=None,
+               page_size=None, num_pages=None):
+    """``page_size``/``num_pages`` select the paged KV cache: global-attention
+    layers get per-layer page pools (no batch axis) and the returned dict
+    carries a ``page_table`` leaf (batch, ceil(length / page_size)) int32 —
+    part of the cache pytree so ``decode_step`` keeps its signature and one
+    compiled step.  The table is owned by the serving engine (host-side
+    allocator); the model only reads it."""
     unit, n_units, rem = find_unit(cfg.layer_kinds)
     cache = {"unit": [], "rem": []}
     for kind in unit:
-        one = init_layer_cache(cfg, kind, batch, length, dtype, kv_dtype)
+        one = init_layer_cache(cfg, kind, batch, length, dtype, kv_dtype,
+                               page_size, num_pages)
         cache["unit"].append(
             jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_units,) + x.shape), one)
         )
     for kind, count in rem_runs(rem):
-        one = init_layer_cache(cfg, kind, batch, length, dtype, kv_dtype)
+        one = init_layer_cache(cfg, kind, batch, length, dtype, kv_dtype,
+                               page_size, num_pages)
         cache["rem"].append(
             jax.tree.map(lambda x: jnp.broadcast_to(x[None], (count,) + x.shape), one)
         )
+    if page_size is not None:
+        pages_per_seq = -(-length // page_size)
+        cache["page_table"] = jnp.zeros((batch, pages_per_seq), jnp.int32)
     return cache
 
 
-def cache_axes(cfg, quantized_kv: bool = False):
+def cache_axes(cfg, quantized_kv: bool = False, paged: bool = False):
     unit, n_units, rem = find_unit(cfg.layer_kinds)
 
     def stack_axes(tree):
         return jax.tree.map(lambda ax: (None,) + tuple(ax), tree,
                             is_leaf=lambda x: isinstance(x, tuple))
 
-    return {
-        "unit": [stack_axes(layer_cache_axes(k, quantized_kv)) for k in unit],
-        "rem": [stack_axes(layer_cache_axes(k, quantized_kv)) for k, _ in rem_runs(rem)],
+    axes = {
+        "unit": [stack_axes(layer_cache_axes(k, quantized_kv, paged)) for k in unit],
+        "rem": [stack_axes(layer_cache_axes(k, quantized_kv, paged))
+                for k, _ in rem_runs(rem)],
     }
+    if paged:
+        axes["page_table"] = ("batch", None)
+    return axes
 
 
 def _run_layers(cfg, params, x, *, mode: str, cache=None, pos=None):
-    """Scan the unit stack, then the remainder.  Returns (x, new_cache, aux)."""
+    """Scan the unit stack, then the remainder.  Returns (x, new_cache, aux).
+
+    A paged cache carries its ``page_table`` alongside the layer caches; it
+    is read-only inside the step (the engine owns allocation), so it rides
+    into the scan bodies as a closure constant and is reattached to the
+    returned cache unchanged."""
     unit, n_units, rem = find_unit(cfg.layer_kinds)
+    page_table = cache.get("page_table") if cache is not None else None
 
     remat = mode == "train" and getattr(cfg, "remat", False)
 
@@ -342,7 +378,8 @@ def _run_layers(cfg, params, x, *, mode: str, cache=None, pos=None):
                     functools.partial(one_layer, kind), static_argnums=()
                 )(layer_ps[pi], x)
             else:
-                x, nc, a = apply_layer(cfg, kind, layer_ps[pi], x, mode=mode, cache=c, pos=pos)
+                x, nc, a = apply_layer(cfg, kind, layer_ps[pi], x, mode=mode, cache=c,
+                                       pos=pos, page_table=page_table)
             new_cs.append(nc)
             aux = aux + a
         return (x, aux), tuple(new_cs) if cache is not None else None
@@ -359,15 +396,18 @@ def _run_layers(cfg, params, x, *, mode: str, cache=None, pos=None):
             if remat:
                 x, nc, a = jax.checkpoint(functools.partial(one_layer, kind))(p_r, x)
             else:
-                x, nc, a = apply_layer(cfg, kind, p_r, x, mode=mode, cache=c_r, pos=pos)
+                x, nc, a = apply_layer(cfg, kind, p_r, x, mode=mode, cache=c_r,
+                                       pos=pos, page_table=page_table)
             return (x, aux + a), nc
 
         xs_r = (params["rem"][ri], cache["rem"][ri] if cache is not None else None)
         (x, aux), nc = jax.lax.scan(run_body, (x, aux), xs_r)
         rem_caches.append(nc)
-    new_cache = (
-        {"unit": list(unit_caches), "rem": rem_caches} if cache is not None else None
-    )
+    if cache is None:
+        return x, None, aux
+    new_cache = {"unit": list(unit_caches), "rem": rem_caches}
+    if page_table is not None:
+        new_cache["page_table"] = page_table
     return x, new_cache, aux
 
 

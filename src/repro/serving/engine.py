@@ -19,12 +19,45 @@ plan dispatch, so prefill and the one compiled decode step serve pruned +
 quantized weights unchanged.  Passing the ``plan`` corrects the sizer's
 machine-balance point for the shrunken weight stream — the paper's
 combined-optimization claim (batching x pruning) at the engine level.
+
+Paged KV cache (``page_size=...``)
+----------------------------------
+The contiguous cache reserves ``max_len`` tokens per slot, so pool bytes =
+``max_batch * max_len * kv_bytes_per_token`` even when requests are short —
+after the weight stream is compressed (PR 1/2) this reservation is the
+per-sequence cost that caps the batch.  Paged mode replaces it with a
+global pool of ``num_pages`` fixed-size pages per attention layer plus an
+int32 page table; sequences are charged for the pages they actually use
+(``ceil((S + max_new) / page_size)``), allocated at admission and freed at
+completion, so the same pool bytes sustain ``max_len / mean_context`` times
+more concurrent sequences and the sizer's kv term is charged at the
+*actual* expected context (``expected_context=...``) rather than max_len.
+
+Page-table ownership rules (see ``serving/paged.py``):
+
+* the host-side engine is the ONLY allocator/writer of the table; the
+  compiled decode step reads it (and scatters the new token's K/V through
+  it) but never changes the mapping;
+* physical page 0 is the null page: free slots map there so dead-slot
+  scatters in the always-full-batch decode step are harmless;
+* a page with refcount > 1 (prefix-shared) is read-only; every write goes
+  through ``_ensure_private`` which copies it first (copy-on-write).
+
+Prefix sharing (``share_prefix=True``) maps the *full* pages of a common
+prompt prefix (same system prompt, speculative drafts) into the new
+sequence's table with a refcount bump — one physical copy serves every
+concurrent reader.  The partially-filled boundary page is copied at
+admission (eager COW: the new sequence is about to write into it), so a
+donor never sees its writable tail page shared and decode-time COW is a
+defended-against invariant rather than a steady-state cost.  Admission
+under pool exhaustion queues (back-pressure) instead of crashing.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from collections import deque
 from typing import Callable, List, Optional
 
@@ -33,7 +66,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batching import BatchSizer
-from repro.models.api import get_api, kv_bytes_per_token, supports_int8_kv
+from repro.models.api import (
+    get_api,
+    kv_bytes_per_token,
+    supports_int8_kv,
+    supports_paged_kv,
+)
+from repro.serving.paged import (
+    NULL_PAGE,
+    PageAllocator,
+    PoolExhausted,
+    PrefixRegistry,
+)
+
+# paged pool leaf -> its name in a contiguous (prefill) cache
+_PAGED_KEYS = (
+    ("k_pages", "k"),
+    ("v_pages", "v"),
+    ("k_scale_pages", "k_scale"),
+    ("v_scale_pages", "v_scale"),
+)
 
 
 @dataclasses.dataclass
@@ -54,10 +106,22 @@ class EngineStats:
     decode_steps: int = 0
     decode_tokens: int = 0
     completed: int = 0
+    context_tokens: int = 0  # sum over admitted requests of (S + max_new)
+    pages_shared: int = 0  # full prefix pages mapped by refcount (no copy)
+    cow_copies: int = 0  # pages copied before a write (copy-on-write)
 
     @property
     def mean_batch(self) -> float:
         return self.decode_tokens / max(1, self.decode_steps)
+
+    @property
+    def mean_context(self) -> float:
+        """Mean admitted *total* context (S + max_new): what a sequence
+        occupies in the paged pool at completion.  Note this is the
+        allocation quantity, not the sizer's kv charge — the per-step read
+        averages ``batching.mean_decode_context`` = S + max_new/2, since
+        early decode steps read a shorter cache."""
+        return self.context_tokens / max(1, self.prefills)
 
 
 class ServingEngine:
@@ -73,6 +137,10 @@ class ServingEngine:
         sizer: Optional[BatchSizer] = None,
         plan=None,  # WeightPlan: sizes the batch for the compressed stream
         kv_dtype=None,  # "int8" / jnp.int8 selects the quantized KV cache
+        page_size: Optional[int] = None,  # tokens/page: selects the paged cache
+        num_pages: Optional[int] = None,  # pool capacity (default: contiguous parity)
+        share_prefix: bool = False,  # prefix sharing across admitted prompts
+        expected_context: Optional[int] = None,  # mean (S + max_new) for the sizer
         seed: int = 0,
     ):
         self.cfg = cfg
@@ -96,11 +164,27 @@ class ServingEngine:
                 f"{cfg.family} cache does not support it; serving fp",
                 stacklevel=2)
             self.kv_dtype = None
+        self.paged = page_size is not None
+        if self.paged and not supports_paged_kv(cfg):
+            import warnings
+
+            warnings.warn(
+                f"{cfg.name}: paged KV cache requested but the {cfg.family} "
+                f"decode path does not thread a page table; serving the "
+                f"contiguous cache", stacklevel=2)
+            self.paged = False
+        self.page_size = page_size if self.paged else None
         # the cache stream the sizer charges: per-token bytes at this
-        # engine's cache dtype and full context (sliding-window layers
-        # capped at their ring length) — int8 halves it, which moves n_opt
-        # exactly as perf_model.decode_n_opt predicts.
-        kv_tok = kv_bytes_per_token(cfg, self.kv_dtype, context_len=max_len)
+        # engine's cache dtype and the *expected* context — max_len for the
+        # contiguous cache (the reservation is real traffic: ring length ==
+        # max_len), the caller's mean (S + max_new) for the paged cache,
+        # where short requests read only what they wrote.  int8 halves it;
+        # both corrections move n_opt exactly as perf_model.decode_n_opt
+        # predicts.
+        ctx = int(expected_context) if expected_context else max_len
+        ctx = min(ctx, max_len)
+        self.expected_context = ctx
+        kv_tok = kv_bytes_per_token(cfg, self.kv_dtype, context_len=ctx)
         if max_batch is None:
             if sizer is None:
                 if plan is not None:
@@ -109,12 +193,12 @@ class ServingEngine:
                     # lands where Section 5.6 predicts for this model.
                     sizer = plan.sizer(
                         n_params=self.api.n_params_exact(cfg),
-                        kv_bytes_per_token=kv_tok, context_len=max_len,
+                        kv_bytes_per_token=kv_tok, context_len=ctx,
                     )
                 else:
                     sizer = BatchSizer(
                         n_params=self.api.n_params_exact(cfg),
-                        kv_bytes_per_token=kv_tok, context_len=max_len,
+                        kv_bytes_per_token=kv_tok, context_len=ctx,
                     )
             max_batch = min(64, sizer.n_opt)
         self.max_batch = max_batch
@@ -128,10 +212,29 @@ class ServingEngine:
         self.queue: deque = deque()
         self.stats = EngineStats()
         self._rng = jax.random.key(seed)
-        # one shared cache for the pool; per-slot prefill uses a batch-1 cache
-        self.cache = self.api.init_cache(
-            cfg, max_batch, max_len, self.dtype, kv_dtype=self.kv_dtype
-        )
+        if self.paged:
+            self.pages_per_seq = math.ceil(max_len / page_size)
+            # default pool: byte parity with the contiguous reservation
+            # (max_batch * pages_per_seq pages + the null page) — callers
+            # shrink it to realize the paged saving, or keep it and raise
+            # max_batch under the same bytes.
+            self.num_pages = num_pages or (1 + max_batch * self.pages_per_seq)
+            self.allocator = PageAllocator(self.num_pages)
+            self.registry = PrefixRegistry() if share_prefix else None
+            self.slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
+            self._table = np.full(
+                (max_batch, self.pages_per_seq), NULL_PAGE, np.int32)
+            self.cache = self.api.init_cache(
+                cfg, max_batch, max_len, self.dtype, kv_dtype=self.kv_dtype,
+                page_size=page_size, num_pages=self.num_pages,
+            )
+        else:
+            self.allocator = None
+            self.registry = None
+            # one shared cache for the pool; per-slot prefill uses a batch-1 cache
+            self.cache = self.api.init_cache(
+                cfg, max_batch, max_len, self.dtype, kv_dtype=self.kv_dtype
+            )
         self._decode = jax.jit(
             functools.partial(self.api.decode_step, cfg), donate_argnums=(1,)
         )
@@ -149,6 +252,10 @@ class ServingEngine:
     def _live_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
 
+    @property
+    def pages_in_use(self) -> int:
+        return self.allocator.used_pages if self.paged else 0
+
     # -- device-side steps ----------------------------------------------------
 
     @staticmethod
@@ -156,47 +263,177 @@ class ServingEngine:
         api = get_api(cfg)
         return api.prefill(cfg, params, batch, cache1)
 
+    def _prefill_request(self, req: Request):
+        """Run the batch-1 prefill; returns (first sampled token, cache1)."""
+        cache1 = self.api.init_cache(
+            self.cfg, 1, self.max_len, self.dtype, kv_dtype=self.kv_dtype
+        )
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        for k, v in (req.extras or {}).items():
+            batch[k] = jnp.asarray(v)[None]
+        logits, cache1 = self._prefill1(self.params, batch, cache1)
+        tok = self._sample(logits[:, -1], req.temperature)
+        return int(tok[0]), cache1
+
+    def _start_slot(self, slot: int, req: Request, S: int, first_tok: int):
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = S
+        self.slot_remaining[slot] = req.max_new_tokens
+        self.slot_last_tok[slot] = first_tok
+        req.output.append(first_tok)
+        self.slot_remaining[slot] -= 1
+        self.stats.prefills += 1
+        self.stats.context_tokens += S + req.max_new_tokens
+        self._finish_if_done(slot)
+
     def _admit(self):
         """Move queued requests into free slots (prefill)."""
+        if self.paged:
+            return self._admit_paged()
         for slot in self._free_slots():
             if not self.queue:
                 break
             req = self.queue.popleft()
             S = len(req.prompt) + self.api.prefix_len(self.cfg)
             assert S + req.max_new_tokens <= self.max_len, "request exceeds max_len"
-            cache1 = self.api.init_cache(
-                self.cfg, 1, self.max_len, self.dtype, kv_dtype=self.kv_dtype
-            )
-            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
-            for k, v in (req.extras or {}).items():
-                batch[k] = jnp.asarray(v)[None]
-            logits, cache1 = self._prefill1(self.params, batch, cache1)
-            tok = self._sample(logits[:, -1], req.temperature)
+            tok, cache1 = self._prefill_request(req)
             self._write_slot(slot, cache1)
-            self.slot_req[slot] = req
-            self.slot_pos[slot] = S
-            self.slot_remaining[slot] = req.max_new_tokens
-            self.slot_last_tok[slot] = int(tok[0])
-            req.output.append(int(tok[0]))
-            self.slot_remaining[slot] -= 1
-            self.stats.prefills += 1
-            self._finish_if_done(slot)
+            self._start_slot(slot, req, S, tok)
+
+    def _admit_paged(self):
+        """Paged admission: map shared prefix pages, allocate the rest, queue
+        on exhaustion (FIFO back-pressure, no crash)."""
+        ps = self.page_size
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue[0]
+            S = len(req.prompt) + self.api.prefix_len(self.cfg)
+            total = S + req.max_new_tokens
+            capacity = self.pages_per_seq * ps
+            if total > capacity:
+                raise ValueError(
+                    f"request {req.uid}: S + max_new = {total} exceeds the "
+                    f"page-table capacity {capacity} (pages_per_seq * "
+                    f"page_size); raise max_len")
+            prompt_key = tuple(int(t) for t in req.prompt)
+            shared_len, shared_pages = (
+                self.registry.match(prompt_key) if self.registry is not None
+                else (0, []))
+            n_total = math.ceil(total / ps)
+            n_full = shared_len // ps  # full pages mapped by refcount
+            boundary = 1 if shared_len % ps else 0  # partial page: eager COW
+            if not self.allocator.can_alloc(n_total - n_full):
+                break  # pool exhausted: request stays queued
+            self.queue.popleft()
+            retained = shared_pages[:n_full]
+            self.allocator.retain(retained)
+            fresh = self.allocator.alloc(n_total - n_full)
+            if boundary:
+                # the new sequence writes positions [shared_len, ...) into
+                # this page, so it cannot share it read-only: copy-on-write
+                # at mapping time (the donor's copy is never disturbed).
+                self._copy_page(shared_pages[n_full], fresh[0])
+                self.stats.cow_copies += 1
+            pages = retained + fresh
+            self.stats.pages_shared += n_full
+            self.slot_pages[slot] = pages
+            self._table[slot, :] = NULL_PAGE
+            self._table[slot, : len(pages)] = pages
+            tok, cache1 = self._prefill_request(req)
+            # shared positions [0, shared_len) already hold identical KV
+            # (same tokens, same positions, same params): write only ours.
+            self._write_slot_paged(slot, cache1, start=shared_len, stop=S)
+            if self.registry is not None:
+                self.registry.register(prompt_key, pages[: math.ceil(S / ps)])
+            self._start_slot(slot, req, S, tok)
+
+    # -- paged-pool plumbing --------------------------------------------------
+
+    def _cache_entries(self):
+        """Yield (list, index, entry) over the per-layer cache dicts so pool
+        leaves can be replaced in place."""
+        for lst in (self.cache["unit"], self.cache["rem"]):
+            for i in range(len(lst)):
+                yield lst, i, lst[i]
+
+    def _copy_page(self, src: int, dst: int):
+        """pool[dst] <- pool[src] across every paged leaf (all layers)."""
+        for lst, i, entry in self._cache_entries():
+            if isinstance(entry, dict) and "k_pages" in entry:
+                new = dict(entry)
+                for pk, _ in _PAGED_KEYS:
+                    if pk in entry:
+                        arr = entry[pk]
+                        new[pk] = arr.at[:, dst].set(arr[:, src])
+                lst[i] = new
+
+    def _ensure_private(self, slot: int, logical_page: int):
+        """Copy-on-write guard: the page about to be written must be
+        privately owned.  With eager boundary COW at admission this never
+        fires in steady state; it is the enforced invariant that makes
+        refcount > 1 pages read-only no matter how sharing evolves."""
+        phys = self.slot_pages[slot][logical_page]
+        if self.allocator.refcount[phys] > 1:
+            new = self.allocator.alloc(1)[0]  # PoolExhausted = config error
+            self._copy_page(phys, new)
+            self.allocator.release([phys])
+            self.slot_pages[slot][logical_page] = new
+            self._table[slot, logical_page] = new
+            self.stats.cow_copies += 1
+
+    def _write_slot_paged(self, slot: int, cache1, start: int, stop: int):
+        """Scatter a batch-1 contiguous prefill cache into this slot's pages
+        (positions [start, stop)); non-paged leaves (sliding-window rings,
+        recurrent states) use the per-slot insert."""
+        ps = self.page_size
+        pos_w = np.arange(start, stop)
+        for lp in sorted({int(p) // ps for p in pos_w}):
+            self._ensure_private(slot, lp)
+        phys = np.asarray(
+            [self.slot_pages[slot][p // ps] for p in pos_w], np.int32)
+        off = (pos_w % ps).astype(np.int32)
+        c1_entries = list(cache1["unit"]) + list(cache1["rem"])
+        for n, (lst, i, entry) in enumerate(self._cache_entries()):
+            one = c1_entries[n]
+            if isinstance(entry, dict) and "k_pages" in entry:
+                if len(pos_w) == 0:
+                    continue
+                new = dict(entry)
+                for pk, ck in _PAGED_KEYS:
+                    if pk in entry:
+                        vals = one[ck][:, 0, pos_w]
+                        new[pk] = entry[pk].at[:, phys, off].set(
+                            vals.astype(entry[pk].dtype))
+                lst[i] = new
+            else:
+                lst[i] = jax.tree.map(
+                    functools.partial(self._ins_slot, slot), entry, one)
+
+    def _free_slot_pages(self, slot: int):
+        freed = self.allocator.release(self.slot_pages[slot])
+        if self.registry is not None:
+            self.registry.evict(freed)
+        self.slot_pages[slot] = []
+        self._table[slot, :] = NULL_PAGE
+
+    # -- contiguous-slot plumbing ---------------------------------------------
+
+    def _ins_slot(self, slot: int, pool, one):
+        # batch axis position differs per leaf family: attn caches are
+        # (..., B, S, KVH, hd) with B at -4; recurrent states keep B
+        # first. We locate the axis whose size == max_batch.
+        axis = next(
+            i for i, s in enumerate(pool.shape) if s == self.max_batch and one.shape[i] == 1
+        )
+        idx = [slice(None)] * pool.ndim
+        idx[axis] = slice(slot, slot + 1)
+        return pool.at[tuple(idx)].set(one.astype(pool.dtype))
 
     def _write_slot(self, slot: int, cache1):
         """Copy a batch-1 cache into pool slot `slot` (batch axis index)."""
-
-        def ins(pool, one):
-            # batch axis position differs per leaf family: attn caches are
-            # (..., B, S, KVH, hd) with B at -4; recurrent states keep B
-            # first. We locate the axis whose size == max_batch.
-            axis = next(
-                i for i, s in enumerate(pool.shape) if s == self.max_batch and one.shape[i] == 1
-            )
-            idx = [slice(None)] * pool.ndim
-            idx[axis] = slice(slot, slot + 1)
-            return pool.at[tuple(idx)].set(one.astype(pool.dtype))
-
-        self.cache = jax.tree.map(ins, self.cache, cache1)
+        self.cache = jax.tree.map(
+            functools.partial(self._ins_slot, slot), self.cache, cache1)
 
     def _sample(self, logits, temperature: float):
         if temperature <= 0.0:
@@ -210,6 +447,8 @@ class ServingEngine:
             req.done = True
             self.slot_req[slot] = None
             self.stats.completed += 1
+            if self.paged:
+                self._free_slot_pages(slot)
 
     def step(self) -> int:
         """One engine tick: admit + one batched decode step.  Returns the
@@ -218,6 +457,13 @@ class ServingEngine:
         live = self._live_slots()
         if not live:
             return 0
+        if self.paged:
+            # COW guard on this tick's write targets, then publish the table
+            # to the device-side cache pytree (the step reads it; the
+            # mapping itself never changes on device).
+            for slot in live:
+                self._ensure_private(slot, int(self.slot_pos[slot]) // self.page_size)
+            self.cache["page_table"] = jnp.asarray(self._table)
         tokens = jnp.asarray(self.slot_last_tok, jnp.int32)[:, None]
         pos = jnp.asarray(self.slot_pos, jnp.int32)
         logits, self.cache = self._decode(self.params, self.cache, tokens, pos)

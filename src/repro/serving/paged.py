@@ -1,0 +1,142 @@
+"""Host-side bookkeeping for the paged KV cache: page allocator + prefix
+registry.
+
+The device side (``models/layers.init_paged_attn_cache`` /
+``paged_decode_attention`` and the Pallas kernel in
+``kernels/flash_attention``) sees only two things: per-layer page *pools*
+``(num_pages, page_size, KVH, hd)`` and one int32 *page table*
+``(max_batch, pages_per_seq)`` mapping each slot's logical page index to a
+physical page.  Everything about who owns which page lives here, on the
+host, so the compiled decode step stays a pure function of (params, cache,
+tokens, pos).
+
+Ownership rules (the engine is the only writer):
+
+* Physical page 0 is the **null page**: never allocated, permanently
+  refcounted.  Free slots point their whole table row at it, so the one
+  compiled decode step can scatter "writes" from dead slots harmlessly.
+* A page with ``refcount == 1`` is privately owned by one sequence and may
+  be written in place (decode appends, prefill scatter).
+* A page with ``refcount > 1`` is **shared read-only** (prefix sharing).
+  Writers must copy it to a fresh page first — copy-on-write.  The engine
+  enforces this via ``ServingEngine._ensure_private`` before every write.
+* ``release`` returns the pages whose refcount hit zero; the engine must
+  evict any registry entry referencing them before they can be reused
+  (``PrefixRegistry.evict``), otherwise a future match would alias
+  recycled memory.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an allocation cannot be satisfied.  Admission treats this
+    as back-pressure (the request stays queued); mid-decode it indicates a
+    misconfigured pool (see ServingEngine docstring) and is a hard error."""
+
+
+class PageAllocator:
+    """Fixed pool of ``num_pages`` KV pages with refcounts and a free list.
+
+    Page 0 is reserved as the null page.  ``alloc`` hands out pages at
+    refcount 1; ``retain`` implements sharing (+1); ``release`` drops one
+    reference per page and recycles pages that hit zero.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError(f"need >= 2 pages (1 null + 1 usable), got {num_pages}")
+        self.num_pages = num_pages
+        self.refcount = np.zeros((num_pages,), np.int32)
+        self.refcount[NULL_PAGE] = 1  # permanently held
+        # LIFO free list, lowest ids first out (stable tests, warm reuse)
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - 1 - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if not self.can_alloc(n):
+            raise PoolExhausted(
+                f"need {n} pages, {len(self._free)} free of {self.num_pages}")
+        pages = [self._free.pop() for _ in range(n)]
+        self.refcount[pages] = 1
+        return pages
+
+    def retain(self, pages: Sequence[int]):
+        for p in pages:
+            if p == NULL_PAGE or self.refcount[p] <= 0:
+                raise ValueError(f"retain of unowned page {p}")
+            self.refcount[p] += 1
+
+    def release(self, pages: Sequence[int]) -> List[int]:
+        """Drop one reference per page; returns the pages that became free."""
+        freed = []
+        for p in pages:
+            if p == NULL_PAGE:
+                continue
+            if self.refcount[p] <= 0:
+                raise ValueError(f"release of unowned page {p}")
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                freed.append(p)
+        return freed
+
+
+class PrefixRegistry:
+    """Maps prompt-token prefixes to the physical pages holding their KV.
+
+    Entries are *weak*: they hold no refcount of their own, so they are only
+    valid while some live sequence still references the pages.  The engine
+    calls ``evict(freed)`` whenever pages return to the free list, which
+    drops every entry touching them — sharing therefore happens between
+    temporally-overlapping requests (same system prompt burst, speculative
+    drafts), and the pool can never be pinned by a cold registry.
+    """
+
+    def __init__(self):
+        self._entries: Dict[Tuple[int, ...], List[int]] = {}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def register(self, tokens: Sequence[int], pages: Sequence[int]):
+        key = tuple(int(t) for t in tokens)
+        if key:
+            self._entries[key] = list(pages)
+
+    def match(self, tokens: Sequence[int]) -> Tuple[int, List[int]]:
+        """Longest registered prefix of ``tokens``.  Returns
+        (matched_token_count, pages covering those tokens) — ([], 0) if no
+        entry matches."""
+        toks = tuple(int(t) for t in tokens)
+        best_key: Tuple[int, ...] = ()
+        for key in self._entries:
+            if len(key) > len(best_key) and toks[: len(key)] == key:
+                best_key = key
+        if not best_key:
+            return 0, []
+        return len(best_key), list(self._entries[best_key])
+
+    def evict(self, freed_pages: Sequence[int]):
+        if not freed_pages:
+            return
+        freed = set(freed_pages)
+        dead = [k for k, pages in self._entries.items() if freed.intersection(pages)]
+        for k in dead:
+            del self._entries[k]

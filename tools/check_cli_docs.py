@@ -1,0 +1,59 @@
+#!/usr/bin/env python
+"""CI docs-lint: every CLI flag of the serving / benchmark drivers must be
+documented.
+
+Scans ``add_argument("--flag", ...)`` calls in ``src/repro/launch/serve.py``
+and string flag literals in ``benchmarks/run.py`` and fails if any flag is
+missing from the documentation corpus (README.md + docs/*.md).  Keeps the
+quickstart honest: a new serving knob lands together with its docs or CI
+goes red.
+
+    python tools/check_cli_docs.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# source file -> regex extracting its flags
+SOURCES = {
+    "src/repro/launch/serve.py": re.compile(r'add_argument\(\s*"(--[a-z0-9-]+)"'),
+    "benchmarks/run.py": re.compile(r'"(--[a-z0-9-]+)"'),
+}
+
+
+def doc_corpus() -> str:
+    texts = [(ROOT / "README.md").read_text()]
+    for p in sorted((ROOT / "docs").glob("*.md")):
+        texts.append(p.read_text())
+    return "\n".join(texts)
+
+
+def main() -> int:
+    corpus = doc_corpus()
+    missing = []
+    total = 0
+    for src, pattern in SOURCES.items():
+        flags = sorted(set(pattern.findall((ROOT / src).read_text())))
+        if not flags:
+            print(f"docs-lint: no flags found in {src} (pattern rot?)")
+            return 1
+        total += len(flags)
+        for flag in flags:
+            if flag not in corpus:
+                missing.append((src, flag))
+    if missing:
+        for src, flag in missing:
+            print(f"docs-lint: {flag} ({src}) is not documented in "
+                  f"README.md or docs/*.md")
+        return 1
+    print(f"docs-lint: {total} CLI flags all documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
