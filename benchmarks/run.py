@@ -25,6 +25,7 @@ from benchmarks import (
     paged_serving,
     pruned_serving,
     roofline,
+    sharded_serving,
     table2_throughput,
     table3_energy,
     table4_accuracy,
@@ -40,6 +41,7 @@ ALL = {
     "roofline": roofline.main,
     "pruned_serving": pruned_serving.main,
     "paged_serving": paged_serving.main,
+    "sharded_serving": sharded_serving.main,
     "decode": decode_microbench.main,
 }
 

@@ -1,0 +1,107 @@
+"""Sharded-serving model bench: per-chip bytes/token and multi-chip n_opt.
+
+The paper's throughput model says decode is a race between an amortizable
+weight stream and per-sample KV reads.  Sharding changes WHO pays each
+stream: ``model_parallel`` chips each stream 1/m of the compressed weights
+(EIE's distribution of a compressed network across PEs), while the KV term
+divides only by the degree the cache leaves *actually* shard by — which the
+axis-rules registry resolves per architecture (whisper-tiny's 6 heads fall
+back to replicated on wide meshes).
+
+Reports, per (model_parallel, kv_parallel) cell on TPU v5e constants:
+
+  * per-chip modeled bytes/token at the cell's own n_opt (weight share +
+    kv share after the shard divisors);
+  * the multi-chip n_opt and its shift against the single-chip point;
+  * asserts the balance check: ``decode_step_time``'s two terms cross at
+    exactly the reported n_opt (balance == 1.00) — the acceptance
+    criterion — and that perfect sharding (kv_m == m) leaves the
+    single-chip balance point untouched.
+
+Also reports the registry-resolved kv shard degree for two real configs
+(tinyllama vs whisper-tiny) on a 16-way model axis, so the divisibility
+fallback is a printed number rather than folklore.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import Mesh
+
+import jax
+
+import repro.configs as C
+from repro.core import perf_model as pm
+from repro.distributed import shardlib as sl
+from repro.models import layers  # noqa: F401 — registers cache axis kinds
+from repro.models.api import kv_bytes_per_token
+
+from benchmarks.common import emit
+
+# llama-1B-ish serving point: int8 weights (b_weight=1), int8 KV cache
+# (22 layers, KVH=4, hd=64), expected context 128.
+N_PARAMS = 10**9
+CTX = 128
+KV_TOK = 2.0 * (4 * 64 + 4 * 4) * 22  # int8 payload + fp32 scales
+
+CELLS = (
+    (1, 1),   # single chip — the PR-2 baseline point
+    (8, 8),   # perfectly sharded group: per-chip balance unchanged
+    (4, 1),   # replicated cache on 4 chips: kv relatively heavier
+    (8, 1),   # replicated cache on 8 chips: memory-bound at any batch
+)
+
+
+def _fake_mesh(m: int) -> Mesh:
+    devs = np.asarray([jax.devices()[0]] * m).reshape(1, m)
+    return Mesh(devs, ("data", "model"))
+
+
+def main(smoke: bool = False) -> None:
+    base = pm.decode_n_opt(
+        b_weight=1.0, n_params=N_PARAMS, kv_bytes_per_token=KV_TOK,
+        context_len=CTX)
+    for m, kv_m in CELLS:
+        n = pm.decode_n_opt(
+            b_weight=1.0, n_params=N_PARAMS, kv_bytes_per_token=KV_TOK,
+            context_len=CTX, model_parallel=m, kv_parallel=kv_m)
+        if not np.isfinite(n):
+            emit(f"sharded_serving/nopt/m{m}_kv{kv_m}", None,
+                 "n_opt=inf (replicated kv stream alone exceeds the "
+                 "per-chip compute budget: memory-bound at any batch)")
+            continue
+        t = pm.decode_step_time(
+            N_PARAMS, n, KV_TOK, CTX, b_weight=1.0,
+            model_parallel=m, kv_parallel=kv_m)
+        balance = t["t_calc"] / t["t_mem"]
+        # the acceptance check: the sizer's n_opt must sit exactly on the
+        # two-term balance point of the multi-chip step model
+        assert abs(balance - 1.0) < 1e-6, (m, kv_m, balance)
+        if kv_m == m:
+            # perfect sharding divides both streams and the MACs by m:
+            # the per-chip balance point must not move
+            assert np.isclose(n, base), (n, base)
+        w_chip = N_PARAMS * 1.0 / m / n  # amortized weight bytes/token/chip
+        kv_chip = CTX * KV_TOK / kv_m  # per-sample kv bytes/token/chip
+        emit(f"sharded_serving/nopt/m{m}_kv{kv_m}", None,
+             f"n_opt={n:.1f} (1-chip {base:.1f}) balance={balance:.2f} "
+             f"B/tok/chip: weights={w_chip:.0f} kv={kv_chip:.0f}")
+
+    # registry-resolved kv shard degrees: tinyllama's 4 kv heads shard a
+    # 4-way model axis but fall back to replicated on a 16-way one, and
+    # whisper-tiny's 6 heads are the documented non-power-of-two fallback.
+    for arch, mesh_m in (("tinyllama-1.1b", 4), ("tinyllama-1.1b", 16),
+                         ("whisper-tiny", 16), ("whisper-tiny", 2)):
+        cfg = C.get_config(arch)
+        mesh = _fake_mesh(mesh_m)
+        deg = sl.shard_degree(mesh, sl.DEFAULT_RULES, ("kv_heads",),
+                              (cfg.n_kv_heads,))
+        kv_tok = kv_bytes_per_token(cfg, None, context_len=CTX)
+        emit(f"sharded_serving/kv_degree/{arch}/m{mesh_m}", None,
+             f"KVH={cfg.n_kv_heads} -> kv_parallel={deg} "
+             f"kv_B/tok/chip={kv_tok / deg:.0f}"
+             + (" (divisibility fallback: replicated)" if deg == 1 else ""))
+
+
+if __name__ == "__main__":
+    main()

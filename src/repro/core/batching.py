@@ -162,6 +162,12 @@ class BatchSizer:
     # n_opt upward; an int8 cache halves it (perf_model.decode_n_opt).
     kv_bytes_per_token: float = 0.0
     context_len: int = 0
+    # multi-chip accounting (perf_model.decode_n_opt): model_parallel chips
+    # each stream 1/m of the weights; kv_parallel (default m) is the degree
+    # the KV cache leaves *actually* shard by under the mesh rules — 1 when
+    # divisibility dropped the kv_heads mapping and the cache replicates.
+    model_parallel: int = 1
+    kv_parallel: int | None = None
 
     @property
     def n_opt(self) -> int:
@@ -175,6 +181,8 @@ class BatchSizer:
             n_params=self.n_params,
             kv_bytes_per_token=self.kv_bytes_per_token,
             context_len=self.context_len,
+            model_parallel=self.model_parallel,
+            kv_parallel=self.kv_parallel,
         )
         if not math.isfinite(n):
             return UNBOUNDED_NOPT  # memory-bound at any batch
@@ -201,6 +209,8 @@ class BatchSizer:
             self.q_prune,
             self.q_overhead,
             self.sparse_compute,
+            model_parallel=self.model_parallel,
+            kv_parallel=self.kv_parallel,
         )["t_proc"]
 
     def pick(self, waiting: int, context_len: int | None = None,

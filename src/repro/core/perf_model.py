@@ -275,6 +275,8 @@ def decode_n_opt(
     n_params: int | None = None,
     kv_bytes_per_token: float = 0.0,
     context_len: int = 0,
+    model_parallel: int = 1,
+    kv_parallel: int | None = None,
 ) -> float:
     """Batch size at which decode flips from HBM-bound to compute-bound.
 
@@ -304,16 +306,44 @@ def decode_n_opt(
     halves the kv term, moving n_opt back toward the weight-only point.
     A non-positive denominator means the per-token kv stream alone exceeds
     the compute budget — decode stays memory-bound at any batch (inf).
+
+    Multi-chip (EIE-style distribution of the compressed stream across
+    chips): ``model_parallel`` = m chips in one tensor-parallel group, each
+    streaming W/m weight bytes and executing 1/m of the MACs;
+    ``kv_parallel`` = the degree the KV cache leaves *actually* shard by
+    (defaults to m; smaller when divisibility drops the kv_heads mapping —
+    whisper-tiny's 6 heads on a 16-way model axis leave the cache
+    replicated, kv_parallel = 1).  ``n`` is the batch per model group (data
+    parallelism replicates the whole analysis).  Per chip:
+
+        t_calc = 2 * comp * n / (m * peak)
+        t_mem  = (W/m + n * ctx * kv / kv_m) / hbm
+
+    Solving t_calc == t_mem:
+
+        n_opt = (W_stream / hbm_bw) / (2*comp/peak - (m/kv_m) * ctx*kv/hbm_bw)
+
+    With kv_m == m every term divides by m and n_opt is *unchanged* — a
+    perfectly sharded group keeps the single-chip balance point per chip.
+    With kv_m < m the replicated cache is relatively heavier per chip: the
+    balance point rises, and can hit memory-bound-at-any-batch even where
+    one chip had a finite n_opt — the multi-chip accounting the sharded
+    serving bench checks (balance == 1.00 at the returned n_opt).
     """
+    m = max(1, int(model_parallel))
+    kv_m = max(1, int(kv_parallel if kv_parallel is not None else m))
     if kv_bytes_per_token > 0.0 and context_len > 0:
         if n_params is None:
             raise ValueError("n_params required for kv-aware n_opt")
         eff = n_params * (1.0 - q_prune)
         comp = eff if sparse_compute else n_params
-        denom = 2.0 * comp / peak_flops - context_len * kv_bytes_per_token / hbm_bw
+        denom = (2.0 * comp / peak_flops
+                 - (m / kv_m) * context_len * kv_bytes_per_token / hbm_bw)
         if denom <= 0.0:
             return float("inf")
         return (eff * b_weight * q_overhead / hbm_bw) / denom
+    # weight-only balance: compute and weight stream both divide by m,
+    # so model parallelism cancels out entirely.
     n = peak_flops * b_weight * q_overhead / (2.0 * hbm_bw)
     if not sparse_compute:
         n *= 1.0 - q_prune
@@ -361,6 +391,8 @@ def decode_step_time(
     q_prune: float = 0.0,
     q_overhead: float = 1.0,
     sparse_compute: bool = True,
+    model_parallel: int = 1,
+    kv_parallel: int | None = None,
 ) -> dict:
     """Two-term decode-step model for an LM with n_params weights.
 
@@ -370,13 +402,22 @@ def decode_step_time(
     FC nets but which matter at 32k+ contexts.  ``sparse_compute`` states
     whether the kernel skips pruned blocks (t_calc scales with 1 - q_prune)
     or executes them as masked zeros (t_calc stays dense).
+
+    ``model_parallel`` shards the weight stream and the MACs over m chips
+    of one tensor-parallel group serving ``batch`` sequences together;
+    ``kv_parallel`` (default m) is the degree the KV leaves actually shard
+    by — replicated caches (kv_parallel=1) pay the full kv read on every
+    chip.  ``n_chips`` keeps its historical meaning of uniform scaling
+    (data-parallel groups splitting a global batch) and composes with both.
     """
+    m = max(1, int(model_parallel))
+    kv_m = max(1, int(kv_parallel if kv_parallel is not None else m))
     eff_params = n_params * (1.0 - q_prune)
     flops = 2.0 * (eff_params if sparse_compute else n_params) * batch
     weight_bytes = eff_params * b_weight * q_overhead
     kv_read = batch * context_len * kv_bytes_per_token
-    tc = flops / (peak_flops * n_chips)
-    tm = (weight_bytes + kv_read) / (hbm_bw * n_chips)
+    tc = flops / (peak_flops * n_chips * m)
+    tm = (weight_bytes / m + kv_read / kv_m) / (hbm_bw * n_chips)
     return {
         "t_calc": tc,
         "t_mem": tm,

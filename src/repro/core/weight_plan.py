@@ -67,6 +67,7 @@ import jax.numpy as jnp
 
 from repro.core.pruning import BlockPruneConfig, block_mask, expand_block_mask
 from repro.core.sparse_format import BlockSparse, build_walk, pad_walk
+from repro.distributed import shardlib as sl
 
 REPRS = ("dense", "quant", "block_sparse", "quant_sparse")
 
@@ -140,6 +141,55 @@ jax.tree_util.register_dataclass(
     data_fields=["blocks", "block_rows", "counts", "scales", "walk"],
     meta_fields=["kind", "shape", "bk", "bn", "use_kernel", "interpret"],
 )
+
+
+# ---------------------------------------------------------------------------
+# axis-rules registry entries (distributed/shardlib): how the compressed
+# representations shard, registered where the layouts are defined
+# ---------------------------------------------------------------------------
+
+
+def _packed_leaf_axes(node: PackedLinear, axes):
+    """Expand a dense weight's logical axes (..., in_ax, out_ax) to the
+    PackedLinear children.
+
+    The payload and its metadata are grouped *per block-column* (the output-
+    feature tiling), so every child that carries a block-column dimension
+    shards on the dense weight's output-feature axis — each chip streams
+    only its slice of the compressed stream, EIE's distribution of a
+    compressed network across PEs.  The ``walk`` is the kernel's global
+    pack-time schedule (column boundaries, accumulator flags): it must stay
+    replicated, like the contraction-axis geometry it encodes.  The
+    contraction axis itself is never sharded: block rows index it, and a
+    split there would break the offset-calculated gather.
+    """
+    lead_n = node.blocks.ndim - 3
+    ax = tuple(axes) if axes is not None else ()
+    out_ax = ax[-1] if len(ax) >= 2 else None
+    lead = ax[:-2] if len(ax) == lead_n + 2 else (None,) * lead_n
+    return dataclasses.replace(
+        node,
+        blocks=lead + (out_ax, None, None),
+        block_rows=lead + (out_ax, None),
+        counts=lead + (out_ax,),
+        scales=None if node.scales is None else lead + (out_ax,),
+        walk=None if node.walk is None else {k: lead + (None,) for k in node.walk},
+    )
+
+
+def _quant_leaf_axes(node: dict, axes):
+    """{"q", "s"}: the int8 payload keeps the dense weight's axes; the
+    per-output-channel scales drop the contraction axis."""
+    if axes is None:
+        return {"q": None, "s": None}
+    ax = tuple(axes)
+    return {"q": ax, "s": ax[:-2] + ax[-1:]}
+
+
+sl.register_node_axes(
+    "packed", lambda n: isinstance(n, PackedLinear), _packed_leaf_axes)
+sl.register_node_axes(
+    "quant", lambda n: isinstance(n, dict) and "q" in n, _quant_leaf_axes)
 
 
 # ---------------------------------------------------------------------------
@@ -366,6 +416,11 @@ class LeafPlan:
     surviving: int  # weights actually streamed (== n_weights unless pruned)
     payload_bytes: float
     metadata_bytes: float
+    # logical sharding axes of the *dense* leaf (e.g. ("d", "ff")); the
+    # axis-rules registry expands them to the packed children (see
+    # _packed_leaf_axes / _quant_leaf_axes).  () when the plan was built
+    # without axes (compress(axes=None), pre-registry plan caches).
+    axes: tuple = ()
 
     @property
     def bytes(self) -> float:
@@ -443,6 +498,28 @@ class WeightPlan:
             **kw,
         )
 
+    # -- sharding (axis-rules registry) -------------------------------------
+
+    def axes_tree(self):
+        """Dense logical-axis pytree matching ``params`` (tuples at planned-
+        node positions, from ``LeafPlan.axes``; None = replicated where the
+        plan has no record).  Feed to ``shardlib.tree_shardings`` — the
+        registry expands packed/quant nodes to per-child axes."""
+
+        def ax(path, node):
+            lp = self.leaves.get(path_str(path))
+            return tuple(lp.axes) if lp is not None and lp.axes else None
+
+        return jax.tree_util.tree_map_with_path(
+            ax, self.params, is_leaf=_is_plan_node)
+
+    def param_shardings(self, mesh=None, rules=None):
+        """NamedShardings for the compressed ``params`` pytree under
+        (mesh, rules) — what the serving engine / launcher place packed
+        weights with."""
+        return sl.tree_shardings(
+            self.params, self.axes_tree(), mesh=mesh, rules=rules)
+
     @property
     def fused_pairs(self) -> int:
         """Gated-FFN (w_gate, w_up) pairs the fused gate+up node serves as
@@ -497,14 +574,14 @@ class WeightPlan:
         )
 
 
-def _leaf_stats(path: str, kind: str, leaf, packed) -> LeafPlan:
+def _leaf_stats(path: str, kind: str, leaf, packed, axes: tuple = ()) -> LeafPlan:
     n = int(np.prod(leaf.shape)) if hasattr(leaf, "shape") else 1
     shape = tuple(getattr(leaf, "shape", ()))
     if kind == "dense":
-        return LeafPlan(path, kind, shape, n, n, n * _DENSE_STREAM_BYTES, 0.0)
+        return LeafPlan(path, kind, shape, n, n, n * _DENSE_STREAM_BYTES, 0.0, axes)
     if kind == "quant":
         scales = packed["s"]
-        return LeafPlan(path, kind, shape, n, n, float(n), 4.0 * scales.size)
+        return LeafPlan(path, kind, shape, n, n, float(n), 4.0 * scales.size, axes)
     # sparse kinds
     p: PackedLinear = packed
     counts = np.asarray(p.counts)
@@ -515,7 +592,7 @@ def _leaf_stats(path: str, kind: str, leaf, packed) -> LeafPlan:
     meta = 4.0 * surv_blocks + 4.0 * counts.size  # row idx per block + counts
     if p.scales is not None:
         meta += 4.0 * np.asarray(p.scales).size
-    return LeafPlan(path, kind, shape, n, surviving, payload, meta)
+    return LeafPlan(path, kind, shape, n, surviving, payload, meta, axes)
 
 
 # ---------------------------------------------------------------------------
@@ -574,7 +651,8 @@ def save_plan(base: str, plan: WeightPlan) -> str:
             "rules": [list(r) for r in plan.cfg.rules],
         },
         "leaves": {
-            p: {**dataclasses.asdict(l), "shape": list(l.shape)}
+            p: {**dataclasses.asdict(l), "shape": list(l.shape),
+                "axes": list(l.axes)}
             for p, l in plan.leaves.items()
         },
         "packed": {p: _node_meta(n) for p, n in plan._by_path.items()},
@@ -645,19 +723,29 @@ def load_plan(base: str, dense_params) -> WeightPlan:
             )
     params = jax.tree_util.tree_unflatten(treedef, [jnp.asarray(a) for a in leaves_np])
     leaves = {
-        p: LeafPlan(**{**d, "shape": tuple(d["shape"])})
+        # `or ()` / .get: plan caches written before the axis-rules registry
+        # have no axes entry — they restore as unsharded (replicated) plans
+        p: LeafPlan(**{**d, "shape": tuple(d["shape"]),
+                       "axes": tuple(d.get("axes") or ())})
         for p, d in meta["leaves"].items()
     }
     return WeightPlan(cfg=cfg, leaves=leaves, params=params, _by_path=_index_nodes(params))
 
 
-def compress(params, cfg: PlanConfig = PlanConfig()) -> WeightPlan:
+def compress(params, cfg: PlanConfig = PlanConfig(), *, axes=None) -> WeightPlan:
     """Walk ``params``, assign each leaf a representation, pack, and return
-    the WeightPlan (with ``plan.params`` the compressed pytree)."""
+    the WeightPlan (with ``plan.params`` the compressed pytree).
+
+    ``axes`` (optional) is the matching pytree of dense logical sharding
+    axes (``api.param_axes(cfg)``): each leaf's axes are recorded in its
+    ``LeafPlan`` so the plan can emit NamedShardings for its own packed
+    pytree (``plan.param_shardings``) through the axis-rules registry.
+    """
+
     leaves: dict = {}
     by_path: dict = {}
 
-    def _one(path, leaf):
+    def _one(path, leaf, ax=None):
         if not hasattr(leaf, "ndim"):
             return leaf
         ps = path_str(path)
@@ -668,11 +756,15 @@ def compress(params, cfg: PlanConfig = PlanConfig()) -> WeightPlan:
             packed = quantize_leaf(leaf)
         else:
             packed = pack_block_sparse(leaf, cfg, quant=(kind == "quant_sparse"))
-        leaves[ps] = _leaf_stats(ps, kind, leaf, packed)
+        leaves[ps] = _leaf_stats(
+            ps, kind, leaf, packed, axes=tuple(ax) if ax else ())
         by_path[ps] = packed
         return packed
 
-    compressed = jax.tree_util.tree_map_with_path(_one, params)
+    if axes is not None:
+        compressed = jax.tree_util.tree_map_with_path(_one, params, axes)
+    else:
+        compressed = jax.tree_util.tree_map_with_path(_one, params)
     return WeightPlan(cfg=cfg, leaves=leaves, params=compressed, _by_path=by_path)
 
 

@@ -117,6 +117,166 @@ def _resolve(
     return P(*spec)
 
 
+# ---------------------------------------------------------------------------
+# axis-rules registry: ONE table from leaf kind to logical axes
+# ---------------------------------------------------------------------------
+#
+# Sharding used to be scattered per call site: model `*_axes` helpers for
+# dense params, an ad-hoc `_quantized_axes` rewrite in the dry-run for
+# {"q","s"} dicts, nothing at all for `PackedLinear` leaves or the serving
+# caches.  The registry replaces that with a serving-wide contract:
+#
+#   * `register_axes(kind, axes)` — *named* leaf kinds (KV caches, scale
+#     leaves, page pools, the page table) register their canonical logical
+#     axes once, where the leaf layout is defined; every consumer (engine
+#     cache placement, launcher in_shardings, docs) reads the same entry.
+#   * `register_node_axes(name, predicate, expander)` — *structured* leaf
+#     kinds (PackedLinear, int8 {"q","s"} dicts) register an expander that
+#     maps the dense weight's logical axes to a matching pytree of axes for
+#     the node's children (blocks shard on the output-feature axis, the
+#     walk stays replicated, scales drop the contraction axis, ...).
+#   * `tree_shardings(tree, axes_tree, ...)` — NamedShardings for any
+#     params/cache pytree, dense or compressed, via the expanders; this is
+#     what lets a compressed, paged, int8-KV serving plan lower under
+#     `use_mesh` with zero special cases.
+#
+# Divisibility stays the registry's problem, not the caller's: `_resolve`
+# drops any mapping the dimension cannot honor (whisper-tiny's 6 heads on a
+# 16-way model axis fall back to replicated), so every (leaf kind x mesh)
+# cell is lowerable.
+
+AXIS_REGISTRY: dict = {}
+
+_NODE_RULES: list = []  # (name, predicate, expander) — first match wins
+
+
+def register_axes(kind: str, axes: Sequence[Optional[str]]) -> tuple:
+    """Register canonical logical axes for a *named* leaf kind (e.g.
+    ``attn.kv_pages``).  Returns the stored tuple so definition sites can
+    register and consume in one expression."""
+    AXIS_REGISTRY[kind] = tuple(axes)
+    return AXIS_REGISTRY[kind]
+
+
+def axes_for(kind: str) -> tuple:
+    """Logical axes registered for a named leaf kind."""
+    return AXIS_REGISTRY[kind]
+
+
+def register_node_axes(name: str, predicate, expander):
+    """Register a *structured* leaf kind.
+
+    ``predicate(node) -> bool`` recognizes the node (also used as the
+    ``is_leaf`` cut when walking pytrees); ``expander(node, dense_axes) ->
+    pytree`` returns logical-axis tuples matching the node's own pytree
+    structure.  ``dense_axes`` is the logical axes of the dense leaf the
+    node replaced (may be None: expanders must fall back to replicated).
+    """
+    _NODE_RULES.append((name, predicate, expander))
+
+
+def is_registered_node(x) -> bool:
+    return any(pred(x) for _, pred, _ in _NODE_RULES)
+
+
+def expand_axes(node, axes):
+    """Logical axes for one (possibly structured) leaf: dense leaves keep
+    ``axes`` as-is; registered node kinds expand to per-child axes."""
+    for _, pred, exp in _NODE_RULES:
+        if pred(node):
+            return exp(node, axes)
+    return axes
+
+
+def registry_table() -> dict:
+    """The full registry, for docs/tests: named kinds -> axes plus the
+    structured-kind names."""
+    return {**{k: AXIS_REGISTRY[k] for k in sorted(AXIS_REGISTRY)},
+            "node_kinds": tuple(name for name, _, _ in _NODE_RULES)}
+
+
+def _leaf_spec(mesh, rules, leaf, ax) -> P:
+    shape = getattr(leaf, "shape", None)
+    if shape is None:
+        return P()
+    if ax is None:
+        ax = (None,) * len(shape)
+    ax = tuple(ax)
+    if len(ax) != len(shape):
+        raise ValueError(
+            f"{len(ax)} logical axes {ax} for shape {tuple(shape)}")
+    return _resolve(mesh, rules, ax, shape)
+
+
+def tree_shardings(tree, axes_tree, *, mesh: Optional[Mesh] = None,
+                   rules: Optional[dict] = None):
+    """NamedShardings for a params/cache pytree (arrays or
+    ShapeDtypeStructs), dense or compressed.
+
+    ``axes_tree`` carries the *dense* logical axes (a tuple per dense leaf
+    position, e.g. from ``api.param_axes``); registered structured nodes
+    (PackedLinear, {"q","s"}) are expanded through the registry.  ``None``
+    axes (or missing structure under a node) mean replicated.
+    """
+    mesh = mesh or current_mesh()
+    rules = rules if rules is not None else current_rules()
+    if mesh is None:
+        raise ValueError("tree_shardings needs a mesh (argument or use_mesh)")
+
+    def one(node, ax):
+        expanded = expand_axes(node, ax)
+        if expanded is None:  # replicated subtree (no axes recorded)
+            return jax.tree.map(
+                lambda leaf: NamedSharding(mesh, _leaf_spec(mesh, rules, leaf, None)),
+                node,
+            )
+        return jax.tree.map(
+            lambda leaf, a: NamedSharding(mesh, _leaf_spec(mesh, rules, leaf, a)),
+            node, expanded,
+        )
+
+    return jax.tree.map(one, tree, axes_tree, is_leaf=is_registered_node)
+
+
+def shard_degree(mesh: Mesh, rules: dict, logical: Sequence[Optional[str]],
+                 shape, *, dim: Optional[int] = None) -> int:
+    """Achieved shard degree of a leaf under (mesh, rules): the product of
+    mesh-axis sizes ``_resolve`` actually applied (non-divisible mappings
+    have already been dropped).  ``dim`` restricts to one dimension — e.g.
+    the kv_heads axis of a cache leaf, which is what the multi-chip perf
+    model divides the kv stream by."""
+    spec = _resolve(mesh, rules, logical, shape)
+    dims = range(len(spec)) if dim is None else (dim,)
+    deg = 1
+    for d in dims:
+        entry = spec[d] if d < len(spec) else None
+        if entry is None or entry is P.UNCONSTRAINED:
+            continue
+        deg *= _axes_size(mesh, entry)
+    return deg
+
+
+def parallelism_degrees(mesh: Optional[Mesh], rules: dict,
+                        n_kv_heads: int = 0) -> tuple:
+    """(data, model, kv) shard degrees for serving accounting — THE one
+    derivation the engine and the serve driver share.
+
+    ``data``: nominal degree of the batch axis (the rules' ``batch``
+    mapping over this mesh) — a per-model-group n_opt must be multiplied by
+    it to get the global batch.  ``model``: the model-axis size (the
+    weight-stream divisor).  ``kv``: the degree the kv_heads dimension
+    *actually* achieves under divisibility (1 when it cannot split — the
+    cache replicates and every chip pays the full kv stream).
+    """
+    if mesh is None:
+        return 1, 1, 1
+    data = _axes_size(mesh, rules.get("batch"))
+    model = int(mesh.shape.get("model", 1))
+    kv = shard_degree(mesh, rules, ("kv_heads",), (n_kv_heads,)) \
+        if n_kv_heads else 1
+    return data, model, kv
+
+
 def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     """Constrain activation sharding by logical axis names (no-op without
     an active mesh)."""

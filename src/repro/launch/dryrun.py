@@ -25,7 +25,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 import repro.configs as C
 from repro.distributed import shardlib as sl
@@ -50,12 +49,11 @@ ICI_BW = 50e9  # bytes/s per link
 
 
 def _shardings(mesh, rules, shapes_tree, axes_tree):
-    """NamedShardings for a pytree of ShapeDtypeStructs + logical axes."""
-
-    def one(sds, ax):
-        return NamedSharding(mesh, sl._resolve(mesh, rules, ax, sds.shape))
-
-    return jax.tree.map(one, shapes_tree, axes_tree)
+    """NamedShardings for a pytree of ShapeDtypeStructs + *dense* logical
+    axes.  Routed through the axis-rules registry (shardlib.tree_shardings),
+    so compressed leaf kinds — {"q","s"} dicts, PackedLinear — expand to
+    per-child axes with no dry-run special cases."""
+    return sl.tree_shardings(shapes_tree, axes_tree, mesh=mesh, rules=rules)
 
 
 _BATCH_AXES = {
@@ -154,19 +152,6 @@ class LoweredCell:
     seconds_compile: float
 
 
-def _quantized_axes(axes, params_q_spec):
-    """Axes for a quantize_for_serving'd params tree: q keeps the weight's
-    axes, s drops the contraction axis."""
-
-    def f(ax, leaf):
-        if isinstance(leaf, dict) and "q" in leaf:
-            ax = tuple(ax)
-            return {"q": ax, "s": ax[:-2] + ax[-1:]}
-        return ax
-
-    return jax.tree.map(f, axes, params_q_spec, is_leaf=lambda x: isinstance(x, tuple))
-
-
 def build_step(cfg, shape, mesh, rules, variant: str = "baseline"):
     """Returns (fn, arg_specs: tuple, in_shardings: tuple, out_shardings).
 
@@ -187,8 +172,8 @@ def build_step(cfg, shape, mesh, rules, variant: str = "baseline"):
             params_spec,
         )
     elif mode != "train" and variant.startswith("int8"):
+        # dense axes carry through: the registry expands {"q","s"} nodes
         params_spec = jax.eval_shape(ML.quantize_for_serving, params_spec)
-        params_axes = _quantized_axes(params_axes, params_spec)
     params_sh = _shardings(mesh, rules, params_spec, params_axes)
     specs = input_specs(cfg, shape)
 

@@ -28,8 +28,32 @@ def make_host_mesh():
     return jax.make_mesh((1, n), ("data", "model"))
 
 
+def make_serving_mesh(spec: str):
+    """Mesh for the serving driver's ``--mesh`` flag.
+
+    ``"host"`` -> (1, n_devices) as (data, model) — every visible device in
+    one tensor-parallel group; ``"DxM"`` (e.g. ``"4x2"``) -> an explicit
+    (data, model) shape over the first D*M devices; ``"none"`` -> None
+    (unsharded single-device serving, the default).
+    """
+    if spec in (None, "", "none"):
+        return None
+    if spec == "host":
+        return make_host_mesh()
+    try:
+        d, m = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(
+            f"--mesh must be 'none', 'host', or 'DxM' (got {spec!r})") from None
+    if d * m > len(jax.devices()):
+        raise ValueError(
+            f"--mesh {spec} needs {d * m} devices, have {len(jax.devices())} "
+            f"(hint: XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return jax.make_mesh((d, m), ("data", "model"))
+
+
 def rules_for(cfg, shape=None, *, zero_opt: bool = True,
-              sequence_parallel: bool = False) -> dict:
+              sequence_parallel: bool = False, mesh=None) -> dict:
     """Logical->physical rules for one (arch, shape) cell.
 
     Baseline rules come from shardlib.DEFAULT_RULES; per-cell adjustments:
@@ -38,8 +62,13 @@ def rules_for(cfg, shape=None, *, zero_opt: bool = True,
         batch — sequence parallelism for the 500k cells;
       * MoE archs whose expert count is not divisible by the model axis:
         shard the expert FFN hidden dim instead (expert_ff -> model).
+
+    ``mesh`` (optional) supplies the actual model-axis size for the MoE
+    divisibility check; without it the production 16-way axis is assumed
+    (the historical behavior for the dry-run meshes).
     """
     rules = dict(sl.DEFAULT_RULES)
+    model_size = int(mesh.shape.get("model", 1)) if mesh is not None else 16
     if sequence_parallel and (shape is None or shape.kind in ("train", "prefill")):
         # Megatron-SP: the residual stream between TP blocks is sharded on
         # seq over `model`; GSPMD turns the per-block f32 all-reduces into
@@ -57,7 +86,8 @@ def rules_for(cfg, shape=None, *, zero_opt: bool = True,
     if shape is not None and shape.kind == "prefill" and shape.global_batch < 16:
         rules["seq"] = "data"
         rules["cache_seq"] = "data"
-    if cfg is not None and cfg.moe is not None and cfg.moe.n_experts_padded % 16 != 0:
+    if (cfg is not None and cfg.moe is not None
+            and cfg.moe.n_experts_padded % model_size != 0):
         # expert count doesn't divide the model axis and no padding was
         # configured: fall back to intra-expert TP
         rules["experts"] = None

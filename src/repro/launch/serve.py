@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import numpy as np
@@ -29,6 +30,8 @@ import repro.configs as C
 from repro.core.batching import UNBOUNDED_NOPT, BatchSizer, mean_decode_context
 from repro.core.perf_model import paged_pool_pages
 from repro.core.weight_plan import PlanConfig, load_plan, save_plan
+from repro.distributed import shardlib as sl
+from repro.launch import mesh as M
 from repro.models.api import (
     get_api,
     kv_bytes_per_token,
@@ -98,6 +101,11 @@ def main(argv=None):
     ap.add_argument("--plan-cache", default=None, metavar="DIR",
                     help="persist/restore the packed plan so engines boot "
                          "from packed weights instead of re-packing")
+    ap.add_argument("--mesh", default="none", metavar="SPEC",
+                    help="shard the serving plan over a device mesh via the "
+                         "axis-rules registry: 'none' (default), 'host' "
+                         "(1 x n_devices as data x model), or 'DxM' (e.g. "
+                         "4x2)")
     args = ap.parse_args(argv)
 
     cfg = C.get_config(args.arch, smoke=args.smoke)
@@ -114,11 +122,23 @@ def main(argv=None):
            if paged else args.max_len)
     kv_tok = kv_bytes_per_token(cfg, jax.numpy.int8 if kv_dtype else None,
                                 context_len=ctx)
+    mesh = M.make_serving_mesh(args.mesh)
+    rules = M.rules_for(cfg, None, mesh=mesh) if mesh is not None else None
+    data_parallel, model_parallel, kv_parallel = sl.parallelism_degrees(
+        mesh, rules if rules is not None else sl.DEFAULT_RULES,
+        int(getattr(cfg, "n_kv_heads", 0) or 0))
+    if mesh is not None:
+        print(f"[serve] mesh {dict(mesh.shape)}: data-parallel "
+              f"{data_parallel}, model-parallel {model_parallel}, "
+              f"kv shard degree {kv_parallel}")
     sizer = BatchSizer(n_params=api.n_params_exact(cfg),
-                       kv_bytes_per_token=kv_tok, context_len=ctx)
+                       kv_bytes_per_token=kv_tok, context_len=ctx,
+                       model_parallel=model_parallel, kv_parallel=kv_parallel)
     print(f"[serve] {cfg.name}: n_params={api.n_params_exact(cfg):,} "
-          f"machine-balance n_opt={_fmt_nopt(sizer.n_opt)} (TPU v5e constants, "
-          f"kv={kv_tok:.0f} B/tok @ ctx {ctx})")
+          f"machine-balance n_opt={_fmt_nopt(sizer.n_opt)} per model group"
+          + (f" (x{data_parallel} data replicas for the global batch)"
+             if data_parallel > 1 else "")
+          + f" (TPU v5e constants, kv={kv_tok:.0f} B/tok @ ctx {ctx})")
 
     plan = None
     if args.compress != "none":
@@ -132,30 +152,52 @@ def main(argv=None):
     if paged and not pool_pages:
         # size the pool for the workload, not for max_len: max_batch
         # concurrent sequences at their *allocated* context (admission
-        # charges the full S + max_new, unlike the sizer's per-step mean)
+        # charges the full S + max_new, unlike the sizer's per-step mean).
+        # Pages are a *logical token capacity* and therefore shard-
+        # invariant: under a mesh every chip holds all num_pages pages but
+        # only its kv_heads slice of each, so the per-shard BYTES divide by
+        # the kv shard degree while the page count does not.
         pool_pages = 1 + paged_pool_pages(
             args.max_batch, args.prompt_len + api.prefix_len(cfg) + args.max_new,
             args.page_size)
+    if paged and mesh is not None and model_parallel > 1 \
+            and kv_parallel != model_parallel:
+        # divisibility fallback: the pools' kv_heads dim cannot split this
+        # model axis, so every chip stores (and streams) the FULL pool —
+        # the per-shard divisor silently becomes 1 and a byte budget sized
+        # for pool_bytes/model_parallel per chip would be exceeded.
+        warnings.warn(
+            f"{cfg.name}: paged pools do not shard across the "
+            f"{model_parallel}-way model axis (n_kv_heads={cfg.n_kv_heads} "
+            f"-> kv shard degree {kv_parallel}); per-shard pool bytes equal "
+            f"the global pool — budget --pool-pages accordingly",
+            stacklevel=1)
     engine = ServingEngine(cfg, params, max_len=args.max_len,
                            max_batch=args.max_batch, plan=plan,
                            kv_dtype=kv_dtype,
                            page_size=args.page_size or None,
                            num_pages=pool_pages or None,
                            share_prefix=args.share_prefix,
-                           expected_context=ctx if paged else None)
+                           expected_context=ctx if paged else None,
+                           mesh=mesh, rules=rules)
     if engine.paged:
         print(f"[serve] paged KV cache: {engine.num_pages} pages x "
               f"{engine.page_size} tok (pool "
               f"{engine.num_pages * engine.page_size} tok vs contiguous "
-              f"reservation {engine.max_batch * args.max_len} tok), "
-              f"prefix sharing {'on' if args.share_prefix else 'off'}")
+              f"reservation {engine.max_batch * args.max_len} tok"
+              + (f"; {engine.kv_parallel}-way kv shard -> 1/"
+                 f"{engine.kv_parallel} of each page's bytes per chip"
+                 if engine.kv_parallel > 1 else "")
+              + f"), prefix sharing {'on' if args.share_prefix else 'off'}")
     if plan is not None:
         # one coherent traffic budget, in the bytes/token units the sizer
         # charges at this engine's actual batch
         print(f"[serve] {plan.summary(kv_bytes_per_token=kv_tok, context_len=args.max_len, batch=engine.max_batch)}")
         n_corr = plan.sizer(n_params=api.n_params_exact(cfg),
                             kv_bytes_per_token=kv_tok,
-                            context_len=args.max_len).n_opt
+                            context_len=args.max_len,
+                            model_parallel=model_parallel,
+                            kv_parallel=kv_parallel).n_opt
         print(f"[serve] plan-corrected n_opt={_fmt_nopt(n_corr)}")
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):

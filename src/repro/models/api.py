@@ -34,8 +34,10 @@ from repro.models import vlm as V
 
 def _compress(cfg, params, plan_cfg: WP.PlanConfig) -> WP.WeightPlan:
     """Default compression: family-agnostic plan walk (every family's
-    matmuls already route through the plan dispatch)."""
-    return WP.compress(params, plan_cfg)
+    matmuls already route through the plan dispatch).  The family's dense
+    param axes ride along so every LeafPlan records its logical sharding
+    axes and the plan can emit NamedShardings for its packed pytree."""
+    return WP.compress(params, plan_cfg, axes=get_api(cfg).param_axes(cfg))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -201,9 +201,17 @@ def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16, kv_dtype=None):
     return {"k": z, "v": z, "xk": zx, "xv": zx}
 
 
-def cache_axes(cfg):
-    ax = (None, "batch", "cache_seq", "kv_heads", None)
-    axx = (None, "batch", None, "kv_heads", None)
+# cross-attention K/V are filled once at prefill and read-only thereafter:
+# frames replicated, heads tensor-parallel like the self-attention cache.
+_XKV_AXES = sl.register_axes("encdec.xkv", ("batch", None, "kv_heads", None))
+
+
+def cache_axes(cfg, quantized_kv: bool = False, paged: bool = False):
+    """``quantized_kv`` / ``paged`` accepted for API uniformity: the enc-dec
+    cache supports neither (the engine warns and serves the fp contiguous
+    cache), so the axes are always the fp layout."""
+    ax = (None,) + sl.axes_for("attn.kv")
+    axx = (None,) + _XKV_AXES
     return {"k": ax, "v": ax, "xk": axx, "xv": axx}
 
 

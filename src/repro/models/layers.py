@@ -527,12 +527,21 @@ def apply_attn(
             if "k_scale_pages" in cache:
                 k, ks = quantize_kv(k)
                 v, vs = quantize_kv(v)
-                new_cache["k_scale_pages"] = paged_cache_update(
-                    cache["k_scale_pages"], ks, page_table, pos)
-                new_cache["v_scale_pages"] = paged_cache_update(
-                    cache["v_scale_pages"], vs, page_table, pos)
-            new_cache["k_pages"] = paged_cache_update(cache["k_pages"], k, page_table, pos)
-            new_cache["v_pages"] = paged_cache_update(cache["v_pages"], v, page_table, pos)
+                new_cache["k_scale_pages"] = sl.shard_pinned(
+                    paged_cache_update(cache["k_scale_pages"], ks, page_table, pos),
+                    *sl.axes_for("attn.kv_scale_pages"))
+                new_cache["v_scale_pages"] = sl.shard_pinned(
+                    paged_cache_update(cache["v_scale_pages"], vs, page_table, pos),
+                    *sl.axes_for("attn.kv_scale_pages"))
+            # pin pools to their registered layout: the scatter's inferred
+            # sharding would otherwise make GSPMD reshard the whole pool at
+            # the step boundary (same failure mode as the contiguous cache)
+            new_cache["k_pages"] = sl.shard_pinned(
+                paged_cache_update(cache["k_pages"], k, page_table, pos),
+                *sl.axes_for("attn.kv_pages"))
+            new_cache["v_pages"] = sl.shard_pinned(
+                paged_cache_update(cache["v_pages"], v, page_table, pos),
+                *sl.axes_for("attn.kv_pages"))
             o = paged_decode_attention(
                 q, new_cache["k_pages"], new_cache["v_pages"], page_table, pos,
                 window=window, softcap=cfg.logit_softcap,
@@ -551,8 +560,8 @@ def apply_attn(
                 v, vs = quantize_kv(v)
                 ksc = _cache_update(cache["k_scale"], ks, pos)
                 vsc = _cache_update(cache["v_scale"], vs, pos)
-                ksc = sl.shard_pinned(ksc, "batch", "cache_seq", "kv_heads")
-                vsc = sl.shard_pinned(vsc, "batch", "cache_seq", "kv_heads")
+                ksc = sl.shard_pinned(ksc, *sl.axes_for("attn.kv_scale"))
+                vsc = sl.shard_pinned(vsc, *sl.axes_for("attn.kv_scale"))
             else:
                 ksc = vsc = None
             kc = _cache_update(cache["k"], k, pos)
@@ -560,8 +569,8 @@ def apply_attn(
             # pin to the declared cache layout: any deviation makes GSPMD
             # reshard the whole cache at the step boundary (measured as a
             # multi-GB all-gather per decode step before this constraint)
-            kc = sl.shard_pinned(kc, "batch", "cache_seq", "kv_heads", None)
-            vc = sl.shard_pinned(vc, "batch", "cache_seq", "kv_heads", None)
+            kc = sl.shard_pinned(kc, *sl.axes_for("attn.kv"))
+            vc = sl.shard_pinned(vc, *sl.axes_for("attn.kv"))
             o = decode_attention(
                 q, kc, vc, pos, window=window, softcap=cfg.logit_softcap,
                 k_scale=ksc, v_scale=vsc,
@@ -620,12 +629,20 @@ def init_attn_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16):
     return {"k": z, "v": z}
 
 
+# axis-rules registry entries (distributed/shardlib): the KV-cache leaf
+# layouts register their logical axes once, here, where the layouts are
+# defined; the engine's cache placement, the launcher's in_shardings, and
+# the in-step shard_pinned constraints all read the same entries.
+_KV_AXES = sl.register_axes("attn.kv", ("batch", "cache_seq", "kv_heads", None))
+_KV_SCALE_AXES = sl.register_axes(
+    "attn.kv_scale", ("batch", "cache_seq", "kv_heads"))
+
+
 def attn_cache_axes(quantized: bool = False):
-    ax = ("batch", "cache_seq", "kv_heads", None)
-    axes = {"k": ax, "v": ax}
+    axes = {"k": _KV_AXES, "v": _KV_AXES}
     if quantized:
-        axes["k_scale"] = ("batch", "cache_seq", "kv_heads")
-        axes["v_scale"] = ("batch", "cache_seq", "kv_heads")
+        axes["k_scale"] = _KV_SCALE_AXES
+        axes["v_scale"] = _KV_SCALE_AXES
     return axes
 
 
@@ -656,14 +673,21 @@ def init_paged_attn_cache(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat1
     return {"k_pages": z, "v_pages": z}
 
 
+# Pools have no batch axis: they shard over the model axis on kv_heads
+# (tensor-parallel attention — every chip holds all pages but only its
+# heads' slice of each, so the page table stays host-side per-replica and
+# the decode gather never crosses chips).  The page axes stay replicated:
+# the table maps any slot to any physical page.
+_KV_PAGES_AXES = sl.register_axes("attn.kv_pages", (None, None, "kv_heads", None))
+_KV_SCALE_PAGES_AXES = sl.register_axes(
+    "attn.kv_scale_pages", (None, None, "kv_heads"))
+
+
 def paged_attn_cache_axes(quantized: bool = False):
-    # pools have no batch axis; keep heads on the kv_heads mesh axis and
-    # leave the page axes replicated (sharded paged serving is open work)
-    ax = (None, None, "kv_heads", None)
-    axes = {"k_pages": ax, "v_pages": ax}
+    axes = {"k_pages": _KV_PAGES_AXES, "v_pages": _KV_PAGES_AXES}
     if quantized:
-        axes["k_scale_pages"] = (None, None, "kv_heads")
-        axes["v_scale_pages"] = (None, None, "kv_heads")
+        axes["k_scale_pages"] = _KV_SCALE_PAGES_AXES
+        axes["v_scale_pages"] = _KV_SCALE_PAGES_AXES
     return axes
 
 

@@ -257,11 +257,11 @@ def _attn_prefill(cfg, p, h, kind, base, cache):
         k, ks = L.quantize_kv(k)
         v, vs = L.quantize_kv(v)
         new_cache["k_scale"] = sl.shard_pinned(
-            fill(cache["k_scale"], ks), "batch", "cache_seq", "kv_heads")
+            fill(cache["k_scale"], ks), *sl.axes_for("attn.kv_scale"))
         new_cache["v_scale"] = sl.shard_pinned(
-            fill(cache["v_scale"], vs), "batch", "cache_seq", "kv_heads")
-    kc = sl.shard_pinned(fill(cache["k"], k), "batch", "cache_seq", "kv_heads", None)
-    vc = sl.shard_pinned(fill(cache["v"], v), "batch", "cache_seq", "kv_heads", None)
+            fill(cache["v_scale"], vs), *sl.axes_for("attn.kv_scale"))
+    kc = sl.shard_pinned(fill(cache["k"], k), *sl.axes_for("attn.kv"))
+    vc = sl.shard_pinned(fill(cache["v"], v), *sl.axes_for("attn.kv"))
     new_cache.update(k=kc, v=vc)
     return sl.shard(out, "batch", "seq_sp", None), new_cache
 
@@ -335,6 +335,12 @@ def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16, kv_dtype=None,
     return cache
 
 
+# the page table is owned host-side per replica (serving/paged.py): batch
+# rides the data axes, the logical-page axis is never sharded — every chip
+# in a model group resolves the same slot -> physical-page mapping.
+_PAGE_TABLE_AXES = sl.register_axes("page_table", ("batch", None))
+
+
 def cache_axes(cfg, quantized_kv: bool = False, paged: bool = False):
     unit, n_units, rem = find_unit(cfg.layer_kinds)
 
@@ -348,7 +354,7 @@ def cache_axes(cfg, quantized_kv: bool = False, paged: bool = False):
                 for k, _ in rem_runs(rem)],
     }
     if paged:
-        axes["page_table"] = ("batch", None)
+        axes["page_table"] = _PAGE_TABLE_AXES
     return axes
 
 

@@ -43,6 +43,22 @@ Page-table ownership rules (see ``serving/paged.py``):
 * a page with refcount > 1 (prefix-shared) is read-only; every write goes
   through ``_ensure_private`` which copies it first (copy-on-write).
 
+Sharded serving (``mesh=...``)
+------------------------------
+Passing a mesh (plus optional rule overrides) serves the same plan sharded:
+params and caches are placed ONCE through the axis-rules registry
+(``distributed/shardlib``) — dense weights by their logical axes, packed
+blocks/scales on the output-feature axis with walks replicated, int8 KV
+scale leaves alongside their payloads, page pools over the model axis on
+``kv_heads`` — and both compiled steps trace under ``use_mesh`` so the
+in-step ``shard_pinned`` constraints resolve against the same rules.  The
+page table and the allocator remain host-side per replica (every chip of a
+model group reads the identical mapping).  The sizer's balance point
+divides the weight stream by the model-parallel degree and the kv term by
+the degree the cache leaves *actually* shard by (``shardlib.shard_degree``
+— 1 when divisibility drops the mapping, e.g. whisper-tiny's 6 heads on a
+16-way model axis).
+
 Prefix sharing (``share_prefix=True``) maps the *full* pages of a common
 prompt prefix (same system prompt, speculative drafts) into the new
 sequence's table with a refcount bump — one physical copy serves every
@@ -66,6 +82,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batching import BatchSizer
+from repro.distributed import shardlib as sl
 from repro.models.api import (
     get_api,
     kv_bytes_per_token,
@@ -141,9 +158,17 @@ class ServingEngine:
         num_pages: Optional[int] = None,  # pool capacity (default: contiguous parity)
         share_prefix: bool = False,  # prefix sharing across admitted prompts
         expected_context: Optional[int] = None,  # mean (S + max_new) for the sizer
+        mesh=None,  # jax Mesh: shard params/caches via the axis-rules registry
+        rules: Optional[dict] = None,  # logical->physical overrides (DEFAULT_RULES base)
         seed: int = 0,
     ):
         self.cfg = cfg
+        self.mesh = mesh
+        self.rules = None
+        if mesh is not None:
+            self.rules = dict(sl.DEFAULT_RULES)
+            if rules:
+                self.rules.update(rules)
         if plan is not None and params is None:
             params = plan.params
         self.params = params
@@ -185,22 +210,38 @@ class ServingEngine:
         ctx = min(ctx, max_len)
         self.expected_context = ctx
         kv_tok = kv_bytes_per_token(cfg, self.kv_dtype, context_len=ctx)
+        # multi-chip accounting for the sizer: the model axis divides the
+        # weight stream; the kv term divides by the degree the cache leaves
+        # *actually* shard by (divisibility may leave them replicated); the
+        # data axes replicate the whole analysis over batch shards.
+        self.data_parallel = self.model_parallel = self.kv_parallel = 1
+        if mesh is not None:
+            (self.data_parallel, self.model_parallel,
+             self.kv_parallel) = sl.parallelism_degrees(
+                mesh, self.rules, int(getattr(cfg, "n_kv_heads", 0) or 0))
         if max_batch is None:
             if sizer is None:
+                mp_kw = dict(model_parallel=self.model_parallel,
+                             kv_parallel=self.kv_parallel)
                 if plan is not None:
                     # pruning + quantization shrink t_mem: the plan knows the
                     # achieved (b_weight, q_prune, q_overhead), so n_opt
                     # lands where Section 5.6 predicts for this model.
                     sizer = plan.sizer(
                         n_params=self.api.n_params_exact(cfg),
-                        kv_bytes_per_token=kv_tok, context_len=ctx,
+                        kv_bytes_per_token=kv_tok, context_len=ctx, **mp_kw,
                     )
                 else:
                     sizer = BatchSizer(
                         n_params=self.api.n_params_exact(cfg),
-                        kv_bytes_per_token=kv_tok, context_len=ctx,
+                        kv_bytes_per_token=kv_tok, context_len=ctx, **mp_kw,
                     )
-            max_batch = min(64, sizer.n_opt)
+            # the sizer's n_opt is the balance point of ONE model group
+            # (data parallelism replicates the whole analysis, see
+            # decode_n_opt): the engine's global batch must feed every data
+            # replica its n_opt sequences or each chip decodes below the
+            # balance point the model just computed.
+            max_batch = min(64, sizer.n_opt * self.data_parallel)
         self.max_batch = max_batch
         self.sizer = sizer
         self.dtype = jnp.dtype(cfg.compute_dtype)
@@ -235,10 +276,60 @@ class ServingEngine:
             self.cache = self.api.init_cache(
                 cfg, max_batch, max_len, self.dtype, kv_dtype=self.kv_dtype
             )
-        self._decode = jax.jit(
-            functools.partial(self.api.decode_step, cfg), donate_argnums=(1,)
+        if mesh is None:
+            self._decode = jax.jit(
+                functools.partial(self.api.decode_step, cfg), donate_argnums=(1,)
+            )
+            self._prefill1 = jax.jit(functools.partial(self._prefill_one_impl, cfg))
+        else:
+            # sharded serving: params and caches are placed ONCE by the
+            # axis-rules registry (dense, PackedLinear, int8 scales, page
+            # pools — no leaf kind falls back to ad-hoc annotations), and
+            # both compiled steps trace under use_mesh so the in-step
+            # shard_pinned constraints resolve against the same rules.
+            self.params = jax.device_put(self.params, self._param_shardings())
+            self.cache = jax.device_put(self.cache, self._cache_shardings())
+
+            def _decode_meshed(params, cache, tokens, pos):
+                with sl.use_mesh(self.mesh, self.rules):
+                    return self.api.decode_step(self.cfg, params, cache, tokens, pos)
+
+            def _prefill_meshed(params, batch, cache1):
+                with sl.use_mesh(self.mesh, self.rules):
+                    return self.api.prefill(self.cfg, params, batch, cache1)
+
+            self._decode = jax.jit(_decode_meshed, donate_argnums=(1,))
+            self._prefill1 = jax.jit(_prefill_meshed)
+
+    # -- sharded placement (axis-rules registry) ------------------------------
+
+    def _param_shardings(self):
+        """NamedShardings for the (possibly compressed) params pytree: the
+        plan's recorded per-leaf axes when available, the family's dense
+        param axes otherwise — both expand through the registry, so packed
+        blocks shard on the output-feature axis and walks stay replicated
+        with zero engine-side special cases."""
+        if self.plan is not None and any(
+            l.axes for l in self.plan.leaves.values()
+        ):
+            return self.plan.param_shardings(mesh=self.mesh, rules=self.rules)
+        return sl.tree_shardings(
+            self.params, self.api.param_axes(self.cfg),
+            mesh=self.mesh, rules=self.rules)
+
+    def _cache_shardings(self):
+        """NamedShardings for the cache pytree via the registered cache
+        axes — including the int8 scale leaves (``attn_cache_axes(
+        quantized=True)``) and the paged pools + page table
+        (``paged_attn_cache_axes``), which previously never reached the
+        launcher."""
+        axes = self.api.cache_axes(
+            self.cfg,
+            quantized_kv=self.kv_dtype == jnp.dtype(jnp.int8),
+            paged=self.paged,
         )
-        self._prefill1 = jax.jit(functools.partial(self._prefill_one_impl, cfg))
+        return sl.tree_shardings(
+            self.cache, axes, mesh=self.mesh, rules=self.rules)
 
     # -- host-side plumbing -------------------------------------------------
 
@@ -463,7 +554,15 @@ class ServingEngine:
             # mapping itself never changes on device).
             for slot in live:
                 self._ensure_private(slot, int(self.slot_pos[slot]) // self.page_size)
-            self.cache["page_table"] = jnp.asarray(self._table)
+            table = jnp.asarray(self._table)
+            if self.mesh is not None:
+                # the table is host-owned per replica: commit it to its
+                # registered layout so the compiled step never resharding-
+                # guesses (the mapping is identical on every model chip)
+                table = jax.device_put(table, sl.named_sharding(
+                    self.mesh, table.shape, *sl.axes_for("page_table"),
+                    rules=self.rules))
+            self.cache["page_table"] = table
         tokens = jnp.asarray(self.slot_last_tok, jnp.int32)[:, None]
         pos = jnp.asarray(self.slot_pos, jnp.int32)
         logits, self.cache = self._decode(self.params, self.cache, tokens, pos)
