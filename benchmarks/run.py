@@ -1,6 +1,7 @@
 """Benchmark runner — one module per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--smoke] [table2 table3 ... decode]
+    PYTHONPATH=src python -m benchmarks.run [--smoke] [--json out.json] \
+        [table2 table3 ... decode]
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` trims the
 heavyweight benches (any whose ``main`` accepts a ``smoke`` parameter:
@@ -9,15 +10,26 @@ fewer sweep points, fewer timing iters); the purely analytic ones
 CI fast lane runs ``--smoke`` over all benches so the perf scripts cannot
 silently rot — a new engine- or kernel-driving bench should accept
 ``smoke`` or it will run full-size there.
+
+``--json PATH`` additionally writes the rows as machine-readable JSON
+(schema below, validated by ``tools/check_bench_schema.py`` and uploaded
+as a CI artifact), so bench output can be diffed between perf PRs instead
+of eyeballed from logs:
+
+    {"schema_version": 1, "smoke": bool, "failed": [names],
+     "rows": [{"bench": str, "name": str,
+               "us_per_call": float | null, "derived": str}]}
 """
 
 from __future__ import annotations
 
 import inspect
+import json
 import sys
 import traceback
 
 from benchmarks import (
+    common,
     decode_microbench,
     fig7_latency,
     kernel_bench,
@@ -26,6 +38,7 @@ from benchmarks import (
     pruned_serving,
     roofline,
     sharded_serving,
+    speculative_serving,
     table2_throughput,
     table3_energy,
     table4_accuracy,
@@ -42,17 +55,32 @@ ALL = {
     "pruned_serving": pruned_serving.main,
     "paged_serving": paged_serving.main,
     "sharded_serving": sharded_serving.main,
+    "speculative_serving": speculative_serving.main,
     "decode": decode_microbench.main,
 }
+
+SCHEMA_VERSION = 1
 
 
 def main() -> None:
     args = sys.argv[1:]
     smoke = "--smoke" in args
-    which = [a for a in args if a != "--smoke"] or list(ALL)
+    args = [a for a in args if a != "--smoke"]
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        try:
+            json_path = args[i + 1]
+        except IndexError:
+            print("--json needs a path", file=sys.stderr)
+            sys.exit(2)
+        del args[i : i + 2]
+    which = args or list(ALL)
     print("name,us_per_call,derived")
     failed = []
+    rows = []
     for name in which:
+        start = len(common.ROWS)
         try:
             fn = ALL[name]
             kwargs = {}
@@ -62,6 +90,18 @@ def main() -> None:
         except Exception:  # noqa: BLE001 — unknown names report like failures
             traceback.print_exc()
             failed.append(name)
+        rows.extend(
+            {"bench": name, "name": r[0],
+             "us_per_call": None if r[1] is None else float(r[1]),
+             "derived": r[2]}
+            for r in common.ROWS[start:]
+        )
+    if json_path:
+        doc = {"schema_version": SCHEMA_VERSION, "smoke": smoke,
+               "failed": failed, "rows": rows}
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {json_path}", file=sys.stderr)
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -1,0 +1,98 @@
+"""Speculative-decode model bench: committed tokens/s vs acceptance rate.
+
+The paper's throughput model says decode throughput is bounded by how many
+samples amortize one pass of the weight stream.  Speculative decode adds a
+second amortization axis: a verify step pushes B * (k+1) positions — k
+drafts plus the committed token per sequence — through ONE target weight
+stream, and the acceptance rate alpha converts those verified positions
+into committed tokens (``perf_model.expected_committed``: E[committed] =
+1 + alpha + ... + alpha^k per sequence per tick).
+
+Reports, on TPU v5e constants at the PR-2 compressed serving point:
+
+  * the degenerate parity row — k=0 (one position per step, no drafts)
+    must reproduce the plain decode model EXACTLY: ``spec_decode_n_opt``
+    == ``decode_n_opt`` and identical step time / tokens/s (asserted);
+  * committed tokens per weight-stream pass across acceptance rates at
+    fixed k — asserted strictly increasing in alpha (the acceptance
+    criterion: tokens/s per weight stream improves with acceptance rate);
+  * the k sweep at a realistic alpha, including the draft-model cost
+    (k sequential small-model steps per tick), showing the optimum k.
+
+The engine-level parity (identical greedy token streams vs the plain
+engine) lives in tests/test_speculative.py; this bench is the modeled
+throughput surface those tests pin the implementation to.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import perf_model as pm
+
+from benchmarks.common import emit
+
+# llama-1B-ish serving point: int8 weights (b_weight=1), int8 KV cache
+# (22 layers, KVH=4, hd=64), expected context 128; tinyllama-sized draft.
+N_PARAMS = 10**9
+DRAFT_PARAMS = 10**8
+CTX = 128
+KV_TOK = 2.0 * (4 * 64 + 4 * 4) * 22  # int8 payload + fp32 scales
+KW = dict(b_weight=1.0, n_params=N_PARAMS, kv_bytes_per_token=KV_TOK,
+          context_len=CTX)
+
+ALPHAS = (0.0, 0.25, 0.5, 0.75, 0.9, 1.0)
+KS = (1, 2, 4, 8)
+
+
+def main(smoke: bool = False) -> None:
+    # -- k=0 degenerate: one position per step == the plain decode bench --
+    base_n = pm.decode_n_opt(**KW)
+    spec_n = pm.spec_decode_n_opt(0, **KW)
+    assert np.isclose(spec_n, base_n), (spec_n, base_n)
+    b = max(1, int(round(base_n)))
+    t_plain = pm.decode_step_time(N_PARAMS, b, KV_TOK, CTX, b_weight=1.0)
+    s0 = pm.spec_step_time(N_PARAMS, b, 0, 0.0, kv_bytes_per_token=KV_TOK,
+                           context_len=CTX, b_weight=1.0)
+    assert np.isclose(s0["t_tick"], t_plain["t_proc"])
+    assert np.isclose(s0["tokens_per_s"], b / t_plain["t_proc"])
+    emit("speculative_serving/parity/k0", None,
+         f"n_opt={spec_n:.1f} == plain {base_n:.1f}; "
+         f"tok/s={s0['tokens_per_s']:.0f} == plain "
+         f"{b / t_plain['t_proc']:.0f} (asserted)")
+
+    # -- acceptance sweep at fixed k: committed tokens per weight stream --
+    k = 4
+    bk = max(1, int(round(pm.spec_decode_n_opt(k, **KW))))
+    prev = -1.0
+    for alpha in ALPHAS:
+        s = pm.spec_step_time(
+            N_PARAMS, bk, k, alpha, draft_n_params=DRAFT_PARAMS,
+            kv_bytes_per_token=KV_TOK, context_len=CTX, b_weight=1.0)
+        # the acceptance criterion: committed tokens amortizing ONE pass of
+        # the target weight stream must improve with the acceptance rate
+        assert s["committed_per_tick"] > prev, (alpha, s["committed_per_tick"])
+        prev = s["committed_per_tick"]
+        emit(f"speculative_serving/accept/k{k}_a{alpha:.2f}", None,
+             f"B={bk} committed/stream={s['committed_per_tick']:.1f} "
+             f"tok/s={s['tokens_per_s']:.0f} "
+             f"(E[committed]={pm.expected_committed(alpha, k):.2f}/seq)")
+    # alpha=1 commits every verified position: (k+1) per sequence
+    assert np.isclose(prev, bk * (k + 1))
+
+    # -- k sweep at realistic alpha (draft cost included) -----------------
+    alpha = 0.75
+    ks = KS[:2] if smoke else KS
+    for k in ks:
+        bk = max(1, int(round(pm.spec_decode_n_opt(k, **KW))))
+        s = pm.spec_step_time(
+            N_PARAMS, bk, k, alpha, draft_n_params=DRAFT_PARAMS,
+            kv_bytes_per_token=KV_TOK, context_len=CTX, b_weight=1.0)
+        emit(f"speculative_serving/ksweep/k{k}", None,
+             f"B_opt={bk} (plain {b}) t_draft/t_tick="
+             f"{s['t_draft'] / s['t_tick']:.2f} "
+             f"tok/s={s['tokens_per_s']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -168,13 +168,21 @@ class BatchSizer:
     # divisibility dropped the kv_heads mapping and the cache replicates.
     model_parallel: int = 1
     kv_parallel: int | None = None
+    # speculative decode (perf_model.spec_decode_n_opt): k draft tokens per
+    # tick make the verify step's effective sample batch B * (k+1), so the
+    # machine-balance *sequence* batch divides by (k+1); spec_accept is the
+    # expected per-draft acceptance rate, which converts verified positions
+    # into committed tokens (throughput reporting only — it does not move
+    # the balance point, rejected positions are still streamed).
+    # draft_n_params sizes the k+1 sequential draft steps per tick so the
+    # latency clamp charges the whole tick, not just the verify step.
+    spec_k: int = 0
+    spec_accept: float = 0.0
+    draft_n_params: int = 0
 
     @property
     def n_opt(self) -> int:
-        n = pm.decode_n_opt(
-            self.peak_flops,
-            self.hbm_bw,
-            self.b_weight,
+        kw = dict(
             q_prune=self.q_prune,
             q_overhead=self.q_overhead,
             sparse_compute=self.sparse_compute,
@@ -184,9 +192,22 @@ class BatchSizer:
             model_parallel=self.model_parallel,
             kv_parallel=self.kv_parallel,
         )
+        if self.spec_k > 0:
+            n = pm.spec_decode_n_opt(
+                self.spec_k, self.peak_flops, self.hbm_bw, self.b_weight, **kw)
+        else:
+            n = pm.decode_n_opt(
+                self.peak_flops, self.hbm_bw, self.b_weight, **kw)
         if not math.isfinite(n):
             return UNBOUNDED_NOPT  # memory-bound at any batch
         return max(1, int(round(n)))
+
+    def committed_per_tick(self, batch: int) -> float:
+        """Expected committed tokens per engine tick at this batch: batch
+        itself for plain decode, acceptance-scaled for speculation."""
+        if self.spec_k <= 0:
+            return float(batch)
+        return batch * pm.expected_committed(self.spec_accept, self.spec_k)
 
     @property
     def memory_bound(self) -> bool:
@@ -197,9 +218,11 @@ class BatchSizer:
 
     def step_time(self, batch: int, context_len: int | None = None,
                   kv_bytes_per_token: float | None = None) -> float:
-        return pm.decode_step_time(
+        # a speculative tick's verify step runs batch * (k+1) verified
+        # positions through the weight stream — charge them all
+        t = pm.decode_step_time(
             self.n_params,
-            batch,
+            batch * (self.spec_k + 1) if self.spec_k > 0 else batch,
             self.kv_bytes_per_token if kv_bytes_per_token is None else kv_bytes_per_token,
             self.context_len if context_len is None else context_len,
             self.peak_flops,
@@ -212,6 +235,15 @@ class BatchSizer:
             model_parallel=self.model_parallel,
             kv_parallel=self.kv_parallel,
         )["t_proc"]
+        if self.spec_k > 0 and self.draft_n_params > 0:
+            # the tick also pays k+1 sequential draft-model steps (the
+            # engine's backfill step included) — without this term the
+            # latency clamp admits batches whose real tick overruns it
+            t += (self.spec_k + 1) * pm.decode_step_time(
+                self.draft_n_params, batch, 0.0, 0,
+                self.peak_flops, self.hbm_bw, self.b_weight, self.n_chips,
+            )["t_proc"]
+        return t
 
     def pick(self, waiting: int, context_len: int | None = None,
              kv_bytes_per_token: float | None = None) -> int:

@@ -350,6 +350,123 @@ def decode_n_opt(
     return n
 
 
+def expected_committed(accept_rate: float, spec_k: int) -> float:
+    """Expected tokens committed per speculative verify tick, per sequence.
+
+    With k draft tokens and i.i.d. per-draft acceptance probability
+    ``accept_rate`` = alpha, draft j commits only if drafts 1..j all
+    matched, and the tick always commits one extra (resampled / bonus)
+    token, so
+
+        E[committed] = 1 + alpha + alpha^2 + ... + alpha^k
+                     = (1 - alpha^(k+1)) / (1 - alpha)
+
+    bounded in [1, k+1]: alpha=0 degenerates to plain decode (every tick
+    still commits exactly one token), alpha=1 commits all k drafts plus
+    the bonus.
+    """
+    if not 0.0 <= accept_rate <= 1.0:
+        raise ValueError(f"accept_rate must be in [0,1], got {accept_rate}")
+    if spec_k < 0:
+        raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+    return float(sum(accept_rate**j for j in range(spec_k + 1)))
+
+
+def spec_decode_n_opt(
+    spec_k: int,
+    peak_flops: float = TPU_V5E_PEAK_FLOPS,
+    hbm_bw: float = TPU_V5E_HBM_BW,
+    b_weight: float = 2.0,
+    q_prune: float = 0.0,
+    q_overhead: float = 1.0,
+    sparse_compute: bool = True,
+    n_params: int | None = None,
+    kv_bytes_per_token: float = 0.0,
+    context_len: int = 0,
+    model_parallel: int = 1,
+    kv_parallel: int | None = None,
+) -> float:
+    """Machine-balance *sequence* batch for the speculative verify step.
+
+    Draft tokens are extra samples of the paper's batch processing: one
+    verify step pushes B * (k+1) rows (k drafts + the committed token per
+    sequence) through one weight stream, and each verified position pays
+    its own per-sample kv read.  Both the compute term and the kv term of
+    ``decode_n_opt`` therefore scale with the *verified-position* batch
+    B * (k+1), so the two-term balance sits at
+
+        B_opt = decode_n_opt(...) / (k + 1)
+
+    — the verify step reaches the machine-balance point with (k+1)x fewer
+    concurrent sequences, which is exactly why speculation helps a
+    latency-capped engine that cannot fill n_opt slots.  The acceptance
+    rate does not move the balance point (rejected positions still
+    streamed and verified); it enters through ``expected_committed``,
+    which converts verified positions into committed tokens/s.  The
+    memory-bound-at-any-batch sentinel (inf) passes through unchanged.
+    """
+    if spec_k < 0:
+        raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+    n = decode_n_opt(
+        peak_flops, hbm_bw, b_weight, q_prune, q_overhead, sparse_compute,
+        n_params, kv_bytes_per_token, context_len, model_parallel,
+        kv_parallel,
+    )
+    return n / (spec_k + 1)
+
+
+def spec_step_time(
+    n_params: int,
+    batch: int,
+    spec_k: int,
+    accept_rate: float,
+    draft_n_params: int = 0,
+    kv_bytes_per_token: float = 0.0,
+    context_len: int = 0,
+    peak_flops: float = TPU_V5E_PEAK_FLOPS,
+    hbm_bw: float = TPU_V5E_HBM_BW,
+    b_weight: float = 2.0,
+    **kw,
+) -> dict:
+    """Two-term model of one speculative tick: k draft steps + one verify.
+
+    The verify step is ``decode_step_time`` at the verified-position batch
+    ``batch * (k+1)`` — B*(k+1) rows through one target weight stream, kv
+    charged per verified position.  The draft model (``draft_n_params``,
+    streamed at the same ``b_weight``) runs k sequential single-token
+    steps at batch B; its kv stream is folded into its weight stream ratio
+    and omitted (drafts are small by construction — the term that matters
+    is the k weight streams).  Returns the verify dict plus:
+
+    ``t_draft``               draft-side time per tick
+    ``t_tick``                t_draft + verify t_proc
+    ``committed_per_tick``    batch * expected_committed(accept_rate, k)
+    ``tokens_per_s``          committed tokens per second
+    ``tokens_per_weight_stream``  committed tokens amortizing ONE pass of
+                              the target weight stream — the paper's reuse
+                              factor, now acceptance-scaled.
+    """
+    verify = decode_step_time(
+        n_params, batch * (spec_k + 1), kv_bytes_per_token, context_len,
+        peak_flops, hbm_bw, b_weight, **kw)
+    t_draft = 0.0
+    if spec_k > 0 and draft_n_params > 0:
+        d = decode_step_time(
+            draft_n_params, batch, 0.0, 0, peak_flops, hbm_bw, b_weight, **kw)
+        t_draft = spec_k * d["t_proc"]
+    committed = batch * expected_committed(accept_rate, spec_k)
+    t_tick = verify["t_proc"] + t_draft
+    out = dict(verify)
+    out.update(
+        t_draft=t_draft,
+        t_tick=t_tick,
+        committed_per_tick=committed,
+        tokens_per_s=committed / t_tick,
+        tokens_per_weight_stream=committed / 1.0,  # one stream per tick
+    )
+    return out
+
+
 def pages_for_context(context_len: int, page_size: int) -> int:
     """Pages a sequence of ``context_len`` tokens occupies in the paged KV
     cache — the allocation unit of serving/engine.py's paged mode."""

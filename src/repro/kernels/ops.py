@@ -229,15 +229,31 @@ def paged_decode_attention(
     through the page table (scalar-prefetch indirection — no materialized
     gather).  ``k_scale_pages``/``v_scale_pages`` select the int8 pools with
     dequant-on-load.  No padding needed: page geometry is static.
+
+    ``q`` may carry T > 1 new tokens per sequence (the speculative verify
+    step).  The kernel itself is single-position; position t re-runs it
+    with ``pos + t`` as its newest entry, which reproduces the reference's
+    per-query causal mask exactly — entries the verify step already wrote
+    at positions > pos + t sit beyond that call's newest position and mask
+    out.  The page stream is re-fetched per position; the weight-stream
+    amortization of speculation lives in the matmul kernels (which see all
+    B*T rows at once), not here.
     """
     if interpret is None:
         interpret = not _on_tpu()
-    return _fa.paged_decode_attention(
-        q, k_pages, v_pages, page_table, pos,
-        window=window, softcap=softcap,
+    one = functools.partial(
+        _fa.paged_decode_attention, window=window, softcap=softcap,
         k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
         interpret=interpret,
     )
+    T = q.shape[1]
+    if T == 1:
+        return one(q, k_pages, v_pages, page_table, pos)
+    outs = [
+        one(q[:, t : t + 1], k_pages, v_pages, page_table, pos + t)
+        for t in range(T)
+    ]
+    return jnp.concatenate(outs, axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "block_n", "block_k", "interpret"))

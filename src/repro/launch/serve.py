@@ -14,7 +14,11 @@ stream); ``--page-size N`` serves with the paged KV cache (pool of N-token
 pages + page table instead of a max_len reservation per slot; ``--pool-pages``
 caps the pool, ``--share-prefix`` maps common prompt prefixes copy-on-write);
 ``--plan-cache DIR`` persists the packed pytree so later engine boots skip
-the pack step entirely.
+the pack step entirely.  ``--draft-config ARCH --spec-k K`` serves with
+speculative decode: the draft model proposes K tokens per tick and the
+target verifies all K+1 positions in one multi-token step through the
+same compressed datapath (draft positions amortize the weight stream like
+extra batch samples).
 """
 
 from __future__ import annotations
@@ -106,6 +110,14 @@ def main(argv=None):
                          "axis-rules registry: 'none' (default), 'host' "
                          "(1 x n_devices as data x model), or 'DxM' (e.g. "
                          "4x2)")
+    ap.add_argument("--draft-config", default=None, choices=C.ARCH_IDS,
+                    metavar="ARCH",
+                    help="speculative decode: draft-model architecture "
+                         "proposing --spec-k tokens per tick (same vocab as "
+                         "--arch; verified in one multi-token target step)")
+    ap.add_argument("--spec-k", type=int, default=0, metavar="K",
+                    help="draft tokens proposed+verified per tick (0 = "
+                         "plain decode; needs --draft-config)")
     args = ap.parse_args(argv)
 
     cfg = C.get_config(args.arch, smoke=args.smoke)
@@ -131,9 +143,27 @@ def main(argv=None):
         print(f"[serve] mesh {dict(mesh.shape)}: data-parallel "
               f"{data_parallel}, model-parallel {model_parallel}, "
               f"kv shard degree {kv_parallel}")
+    spec_k = args.spec_k
+    draft_cfg = draft_params = None
+    if args.draft_config and spec_k <= 0:
+        ap.error("--draft-config needs --spec-k > 0 (it would otherwise be "
+                 "silently ignored)")
+    if spec_k > 0:
+        if not args.draft_config:
+            ap.error("--spec-k needs --draft-config")
+        draft_cfg = C.get_config(args.draft_config, smoke=args.smoke)
+        if draft_cfg.vocab != cfg.vocab:
+            ap.error(f"--draft-config vocab {draft_cfg.vocab} != target "
+                     f"vocab {cfg.vocab}")
+        draft_params = get_api(draft_cfg).init_params(
+            draft_cfg, jax.random.key(args.seed + 1))
+        print(f"[serve] speculative decode: {draft_cfg.name} drafts "
+              f"{spec_k} tokens/tick, verified in one (B, {spec_k + 1}) "
+              f"target step")
     sizer = BatchSizer(n_params=api.n_params_exact(cfg),
                        kv_bytes_per_token=kv_tok, context_len=ctx,
-                       model_parallel=model_parallel, kv_parallel=kv_parallel)
+                       model_parallel=model_parallel, kv_parallel=kv_parallel,
+                       spec_k=spec_k)
     print(f"[serve] {cfg.name}: n_params={api.n_params_exact(cfg):,} "
           f"machine-balance n_opt={_fmt_nopt(sizer.n_opt)} per model group"
           + (f" (x{data_parallel} data replicas for the global batch)"
@@ -179,7 +209,9 @@ def main(argv=None):
                            num_pages=pool_pages or None,
                            share_prefix=args.share_prefix,
                            expected_context=ctx if paged else None,
-                           mesh=mesh, rules=rules)
+                           mesh=mesh, rules=rules,
+                           draft_cfg=draft_cfg, draft_params=draft_params,
+                           spec_k=spec_k)
     if engine.paged:
         print(f"[serve] paged KV cache: {engine.num_pages} pages x "
               f"{engine.page_size} tok (pool "
@@ -224,6 +256,13 @@ def main(argv=None):
               f"tok (sizer charged ctx {ctx}), "
               f"{stats.pages_shared} prefix pages shared, "
               f"{stats.cow_copies} copy-on-write copies")
+    if engine.spec_k:
+        print(f"[serve] speculative: {stats.verified_positions} verified "
+              f"positions -> {stats.decode_tokens} committed tokens "
+              f"({stats.decode_tokens / max(1, stats.verified_positions):.2f} "
+              f"committed/verified), draft accept rate "
+              f"{stats.accept_rate:.2f}, "
+              f"{stats.mean_batch:.2f} committed tokens/tick")
 
 
 if __name__ == "__main__":

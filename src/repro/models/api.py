@@ -113,6 +113,25 @@ def supports_int8_kv(cfg) -> bool:
     return any(l.dtype == jnp.int8 for l in jax.tree.leaves(probe))
 
 
+def supports_spec_decode(cfg) -> bool:
+    """Whether this family can serve as the target OR the draft of the
+    speculative decode path (serving/engine.py ``spec_k``).
+
+    Multi-token verify with rollback-free commit needs every piece of
+    per-sequence state to be *positionally addressed*: attention KV caches
+    (contiguous ring or paged pool) re-derive an entry's validity from its
+    position, so rejected speculative writes are simply masked until the
+    next verify step overwrites them.  O(1) recurrent / xLSTM states are
+    sequential integrators with no position axis — a rejected token's
+    update cannot be undone without snapshotting the state — and the
+    VLM / enc-dec decoders don't thread multi-position decode.  So:
+    decoder-only transformer stacks whose layers are all attention."""
+    if get_api(cfg) is not _TRANSFORMER_API:
+        return False
+    kinds = getattr(cfg, "layer_kinds", ()) or ()
+    return bool(kinds) and all(k in ("global", "local") for k in kinds)
+
+
 def supports_paged_kv(cfg) -> bool:
     """Whether this family serves through the paged KV cache.  The decoder-
     only transformer stack (dense / moe / ssm / hybrid) threads the page

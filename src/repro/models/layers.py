@@ -389,70 +389,86 @@ def attention(
 
 
 def decode_attention(
-    q: jax.Array,  # (B, 1, H, hd)
+    q: jax.Array,  # (B, T, H, hd) — T new tokens per sequence (T=1 classic)
     k_cache: jax.Array,  # (B, S, KVH, hd)
     v_cache: jax.Array,
-    pos: jax.Array,  # (B,) position of the new token (cache entries <= pos valid)
+    pos: jax.Array,  # (B,) position of q[:, 0]; cache holds entries <= pos+T-1
     *,
     window: Optional[int] = None,
     softcap: float = 0.0,
     k_scale: Optional[jax.Array] = None,  # (B, S, KVH) int8-cache dequant scales
     v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Single-step attention against a KV cache (one new token per sequence).
+    """Attention against a KV cache for T new tokens per sequence.
+
+    T=1 is the classic decode step; T=k+1 is the speculative *verify* step:
+    the k draft tokens ride the same weight stream as the committed one
+    (the paper's batch-processing amortization with draft positions as the
+    extra samples), and each query position pos+t is causally masked to
+    kv_pos <= pos+t, so all T positions verify in one step against a cache
+    that already contains all T new entries.
 
     The cache is a ring buffer of length S: slot i holds the most recent
-    absolute position p with p % S == i and p <= pos.  For a full-length
-    cache (S > pos) that degenerates to slot i == position i; for a
-    sliding-window cache (S == window) it is the rolling window.
+    absolute position p with p % S == i and p <= pos+T-1.  For a
+    full-length cache (S > pos+T-1) that degenerates to slot i ==
+    position i; for a sliding-window cache it is the rolling window — a
+    speculative engine sizes the ring at window + k (see
+    ``transformer.init_layer_cache``) so the earliest verify query still
+    sees its whole window after the T-entry scatter.  Slots whose derived
+    kv_pos falls outside [0, q_pos] or the window are masked, which is what
+    makes *rejected* speculative writes harmless: a stale entry's slot
+    arithmetic resolves to a position the masks exclude until the entry is
+    overwritten by the next verify step (rollback-free commit).
 
     ``k_scale``/``v_scale`` enable the int8 cache: payloads are int8 with
     per-(slot, head) scales, dequantized by folding the scales into the
     score / probability tensors — (q . k*s) == (q . k) * s and
     p @ (v*s) == (p*s) @ v — so the int8 cache stream is read as-is and the
-    fp correction rides on the (B, KVH, G, S) intermediates.  This is the
-    portable reference path; ``kernels/flash_attention`` dequantizes the
-    same way inside its tile loads on the TPU fast path.
+    fp correction rides on the (B, KVH, G, T, S) intermediates.  This is
+    the portable reference path; ``kernels/flash_attention`` dequantizes
+    the same way inside its tile loads on the TPU fast path.
     """
     B, S, KVH, hd = k_cache.shape
-    H = q.shape[2]
+    T, H = q.shape[1], q.shape[2]
     G = H // KVH
     scale = 1.0 / math.sqrt(hd)
-    qg = q.reshape(B, KVH, G, hd)
+    qg = q.reshape(B, T, KVH, G, hd)
     if k_scale is None:
         # native-dtype cache operands + f32 accumulation: casting the cache
         # would materialize (and possibly reshard) a full f32 copy in HBM.
         s = jnp.einsum(
-            "bkgd,bskd->bkgs", qg.astype(k_cache.dtype), k_cache,
+            "btkgd,bskd->bkgts", qg.astype(k_cache.dtype), k_cache,
             preferred_element_type=jnp.float32,
         ) * scale
     else:
         s = jnp.einsum(
-            "bkgd,bskd->bkgs", qg.astype(jnp.float32),
+            "btkgd,bskd->bkgts", qg.astype(jnp.float32),
             k_cache.astype(jnp.float32), preferred_element_type=jnp.float32,
         ) * scale
-        s = s * k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+        s = s * k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, None, :]
     s = _softcap(s, softcap)
+    newest = pos[:, None] + (T - 1)  # (B, 1) newest written position
     slot = jnp.arange(S)[None]  # (1, S)
-    kv_pos = pos[:, None] - ((pos[:, None] - slot) % S)  # absolute pos per slot
-    mask = kv_pos >= 0
+    kv_pos = newest - ((newest - slot) % S)  # (B, S) absolute pos per slot
+    q_pos = pos[:, None] + jnp.arange(T)[None]  # (B, T)
+    mask = (kv_pos[:, None, :] >= 0) & (kv_pos[:, None, :] <= q_pos[:, :, None])
     if window is not None:
-        mask &= kv_pos > (pos[:, None] - window)
+        mask &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
     s = jnp.where(mask[:, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     if v_scale is None:
         o = jnp.einsum(
-            "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+            "bkgts,bskd->btkgd", p.astype(v_cache.dtype), v_cache,
             preferred_element_type=jnp.float32,
         )
     else:
         o = jnp.einsum(
-            "bkgs,bskd->bkgd",
-            p * v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :],
+            "bkgts,bskd->btkgd",
+            p * v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, None, :],
             v_cache.astype(jnp.float32),
             preferred_element_type=jnp.float32,
         )
-    return o.reshape(B, 1, H, hd).astype(q.dtype)
+    return o.reshape(B, T, H, hd).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -520,7 +536,9 @@ def apply_attn(
             # paged decode: scatter this step's K/V through the page table,
             # then attend via the gather reference (kernels/flash_attention
             # has the indirection kernel that skips the materialized gather).
-            positions = pos[:, None]
+            # S > 1 is the speculative verify step: all S draft positions
+            # scatter and attend in this one step.
+            positions = pos[:, None] + jnp.arange(S)[None]
             q = apply_rope(q, positions, base)
             k = apply_rope(k, positions, base)
             new_cache = dict(cache)
@@ -549,7 +567,7 @@ def apply_attn(
                 v_scale_pages=new_cache.get("v_scale_pages"),
             )
         else:
-            positions = pos[:, None]  # (B, 1)
+            positions = pos[:, None] + jnp.arange(S)[None]  # (B, S) decode span
             q = apply_rope(q, positions, base)
             k = apply_rope(k, positions, base)
             if "k_scale" in cache:
@@ -585,19 +603,29 @@ def apply_attn(
 
 
 def _cache_update(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
-    """Scatter one new (B, 1, KVH, hd) entry at per-sequence positions.
+    """Scatter T new (B, T, KVH, hd) entries at per-sequence positions
+    pos..pos+T-1 (T=1 is the classic decode write).
 
-    For a sliding-window cache (cache S == window size) the write index wraps
-    (ring buffer); masking in decode_attention uses absolute positions, so the
-    caller passes ``pos % window`` semantics via cache shape.
+    For a sliding-window cache the write indices wrap independently per
+    entry (ring buffer); masking in decode_attention uses absolute
+    positions, so the caller passes ``pos % window`` semantics via cache
+    shape.
     """
     S = cache.shape[1]
-    idx = pos % S
+    T = new.shape[1]
+    if T == 1:
+        idx = pos % S
 
-    def upd(c, n, i):
-        return jax.lax.dynamic_update_slice_in_dim(c, n.astype(c.dtype), i, axis=0)
+        def upd(c, n, i):
+            return jax.lax.dynamic_update_slice_in_dim(c, n.astype(c.dtype), i, axis=0)
 
-    return jax.vmap(upd)(cache, new, idx)
+        return jax.vmap(upd)(cache, new, idx)
+    idx = (pos[:, None] + jnp.arange(T)[None]) % S  # (B, T) may wrap per entry
+
+    def upd_t(c, n, i):
+        return c.at[i].set(n.astype(c.dtype))
+
+    return jax.vmap(upd_t)(cache, new, idx)
 
 
 def quantize_kv(x: jax.Array):
@@ -693,21 +721,25 @@ def paged_attn_cache_axes(quantized: bool = False):
 
 def paged_cache_update(
     pool: jax.Array,  # (num_pages, page_size, ...) K/V or scale pool
-    new: jax.Array,  # (B, 1, ...) this step's entries
+    new: jax.Array,  # (B, T, ...) this step's entries (T=1 classic decode)
     page_table: jax.Array,  # (B, pages_per_seq) int32
-    pos: jax.Array,  # (B,) absolute positions being written
+    pos: jax.Array,  # (B,) absolute position of new[:, 0]
 ) -> jax.Array:
-    """Scatter one new entry per sequence through the page table.
+    """Scatter T new entries per sequence through the page table.
 
-    The target page must be privately owned (refcount 1) — the engine
-    guarantees it via copy-on-write before the step.  Dead slots have their
-    table rows pointed at the null page; their scatters collide there and
-    write garbage nobody reads.
+    Every target page must be privately owned (refcount 1) — the engine
+    guarantees it via copy-on-write before the step, across the whole
+    [pos, pos+T-1] write range (a speculative verify step can straddle a
+    page boundary).  Dead slots have their table rows pointed at the null
+    page; their scatters collide there and write garbage nobody reads —
+    the same holds for speculative writes past a sequence's allocated
+    pages, whose table entries are NULL_PAGE.
     """
     page_size = pool.shape[1]
-    B = new.shape[0]
-    phys = page_table[jnp.arange(B), pos // page_size]
-    return pool.at[phys, pos % page_size].set(new[:, 0].astype(pool.dtype))
+    B, T = new.shape[:2]
+    positions = pos[:, None] + jnp.arange(T)[None]  # (B, T)
+    phys = page_table[jnp.arange(B)[:, None], positions // page_size]
+    return pool.at[phys, positions % page_size].set(new.astype(pool.dtype))
 
 
 def gather_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
@@ -719,11 +751,11 @@ def gather_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
 
 
 def paged_decode_attention(
-    q: jax.Array,  # (B, 1, H, hd)
+    q: jax.Array,  # (B, T, H, hd) — T=1 decode, T=k+1 speculative verify
     k_pages: jax.Array,  # (num_pages, ps, KVH, hd)
     v_pages: jax.Array,
     page_table: jax.Array,  # (B, pages_per_seq) int32
-    pos: jax.Array,  # (B,)
+    pos: jax.Array,  # (B,) position of q[:, 0]
     *,
     window: Optional[int] = None,
     softcap: float = 0.0,
@@ -731,7 +763,7 @@ def paged_decode_attention(
     v_scale_pages: Optional[jax.Array] = None,
     use_kernel: Optional[bool] = None,  # None = kernel on TPU, gather elsewhere
 ) -> jax.Array:
-    """Single-step attention through the page table.
+    """Attention for T new tokens per sequence through the page table.
 
     Two numerically-matching datapaths (parity in tests/test_paged_cache.py):
 

@@ -131,7 +131,7 @@ def layer_axes(cfg, kind: str):
 
 
 def init_layer_cache(cfg, kind: str, batch: int, length: int, dtype=jnp.bfloat16,
-                     kv_dtype=None, page_size=None, num_pages=None):
+                     kv_dtype=None, page_size=None, num_pages=None, spec_k=0):
     """``kv_dtype`` overrides the dtype of *attention* KV caches only
     (``jnp.int8`` selects the quantized cache); recurrent/xLSTM states are
     numerical integrators and always keep the compute dtype.
@@ -140,13 +140,22 @@ def init_layer_cache(cfg, kind: str, batch: int, length: int, dtype=jnp.bfloat16
     attention layers: a pool of pages shared by all sequences instead of a
     per-slot ``length`` reservation.  ``local`` layers keep their
     contiguous ring buffer — the window already bounds them at O(window),
-    which is exactly what paging would buy."""
+    which is exactly what paging would buy.
+
+    ``spec_k`` (speculative decode, serving/engine.py) widens the
+    sliding-window ring to ``local_window + spec_k``: a verify step writes
+    k+1 consecutive positions before attending, so a ring of exactly
+    ``window`` length would have the newest draft entries clobber the
+    oldest positions the earliest verify query still needs.  The extra k
+    slots hold the speculative tail; ``decode_attention``'s absolute-
+    position masking keeps rejected entries invisible until the next
+    verify step overwrites them."""
     if kind in ATTN_KINDS:
         if page_size is not None and kind == "global":
             return L.init_paged_attn_cache(
                 cfg, num_pages, page_size, kv_dtype if kv_dtype is not None else dtype
             )
-        ln = min(length, cfg.local_window) if kind == "local" else length
+        ln = min(length, cfg.local_window + spec_k) if kind == "local" else length
         return L.init_attn_cache(cfg, batch, ln, kv_dtype if kv_dtype is not None else dtype)
     if kind == "rec":
         return R.init_rglru_state(cfg, batch, dtype)
@@ -308,24 +317,25 @@ def param_axes(cfg):
 
 
 def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16, kv_dtype=None,
-               page_size=None, num_pages=None):
+               page_size=None, num_pages=None, spec_k=0):
     """``page_size``/``num_pages`` select the paged KV cache: global-attention
     layers get per-layer page pools (no batch axis) and the returned dict
     carries a ``page_table`` leaf (batch, ceil(length / page_size)) int32 —
     part of the cache pytree so ``decode_step`` keeps its signature and one
     compiled step.  The table is owned by the serving engine (host-side
-    allocator); the model only reads it."""
+    allocator); the model only reads it.  ``spec_k`` widens sliding-window
+    rings for speculative decode (see ``init_layer_cache``)."""
     unit, n_units, rem = find_unit(cfg.layer_kinds)
     cache = {"unit": [], "rem": []}
     for kind in unit:
         one = init_layer_cache(cfg, kind, batch, length, dtype, kv_dtype,
-                               page_size, num_pages)
+                               page_size, num_pages, spec_k)
         cache["unit"].append(
             jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_units,) + x.shape), one)
         )
     for kind, count in rem_runs(rem):
         one = init_layer_cache(cfg, kind, batch, length, dtype, kv_dtype,
-                               page_size, num_pages)
+                               page_size, num_pages, spec_k)
         cache["rem"].append(
             jax.tree.map(lambda x: jnp.broadcast_to(x[None], (count,) + x.shape), one)
         )
@@ -447,7 +457,15 @@ def prefill(cfg, params, tokens, cache, extra_embeds: Optional[jax.Array] = None
 
 
 def decode_step(cfg, params, cache, tokens, pos):
-    """One decode step.  tokens: (B, 1) int32; pos: (B,) absolute positions."""
+    """One decode step over T new tokens per sequence.
+
+    tokens: (B, T) int32; pos: (B,) absolute position of tokens[:, 0].
+    T=1 is the classic one-token step; T=k+1 is the speculative *verify*
+    step: the cache scatters all T positions and every query attends with
+    per-position causal masking, so one weight stream serves all T draft
+    positions (the paper's batch-processing amortization along the token
+    axis).  Returns logits (B, T, vocab) — logits[:, t] predicts the token
+    after tokens[:, t]."""
     x = L.embed_tokens(cfg, params["embed"], tokens)
     x, cache, _ = _run_layers(cfg, params, x, mode="decode", cache=cache, pos=pos)
     x = L.apply_norm(params["final_norm"], x, cfg.norm)

@@ -59,6 +59,30 @@ the degree the cache leaves *actually* shard by (``shardlib.shard_degree``
 — 1 when divisibility drops the mapping, e.g. whisper-tiny's 6 heads on a
 16-way model axis).
 
+Speculative decode (``draft_cfg=..., draft_params=..., spec_k=k``)
+-------------------------------------------------------------------
+A small draft model proposes k tokens per tick (k cheap single-token
+steps), and the target verifies all k+1 positions in ONE multi-token
+decode step — draft positions are extra samples of the paper's batch
+processing: one pass of the target's (compressed) weight stream serves
+``live * (k+1)`` rows instead of ``live``, so a latency-capped engine
+reaches the machine-balance point with (k+1)x fewer concurrent sequences
+(``perf_model.spec_decode_n_opt``).  The accepted prefix commits under
+standard rejection sampling (greedy degenerates to longest argmax-prefix
+match, so greedy committed streams are identical to the non-speculative
+engine's); every tick commits at least the one resampled token.
+
+Rollback is free by construction — no cache snapshot, no undo scatter:
+every tick writes positions [frontier, frontier + k], the frontier
+advances by >= 1, so one tick's rejected tail (<= k entries) always lies
+inside the next tick's write range; between ticks the absolute-position
+masks in ``models/layers.decode_attention`` (and the paged kernel) keep
+stale entries invisible.  This is why speculation is gated on
+positionally-addressed caches (``api.supports_spec_decode``): attention
+KV — contiguous ring (sliding windows get ``window + k`` rings), int8,
+paged, sharded — qualifies; O(1) recurrent/xLSTM integrator states do
+not.
+
 Prefix sharing (``share_prefix=True``) maps the *full* pages of a common
 prompt prefix (same system prompt, speculative drafts) into the new
 sequence's table with a refcount bump — one physical copy serves every
@@ -88,6 +112,7 @@ from repro.models.api import (
     kv_bytes_per_token,
     supports_int8_kv,
     supports_paged_kv,
+    supports_spec_decode,
 )
 from repro.serving.paged import (
     NULL_PAGE,
@@ -121,15 +146,32 @@ class Request:
 class EngineStats:
     prefills: int = 0
     decode_steps: int = 0
-    decode_tokens: int = 0
+    decode_tokens: int = 0  # COMMITTED tokens (speculative rejects excluded)
     completed: int = 0
     context_tokens: int = 0  # sum over admitted requests of (S + max_new)
     pages_shared: int = 0  # full prefix pages mapped by refcount (no copy)
     cow_copies: int = 0  # pages copied before a write (copy-on-write)
+    # speculative decode: positions the target streamed weights for vs
+    # tokens that actually landed.  decode_tokens/mean_batch/mean_context
+    # stay in COMMITTED tokens so throughput numbers remain comparable with
+    # the non-speculative engine (a verified-but-rejected draft position is
+    # occupancy, not serving output).
+    verified_positions: int = 0  # target positions run per verify step
+    draft_proposed: int = 0  # draft tokens offered to verification
+    draft_accepted: int = 0  # draft tokens committed by verification
 
     @property
     def mean_batch(self) -> float:
+        """Mean committed tokens per decode step — the realized weight-reuse
+        factor in *useful* tokens.  Speculation's extra verified positions
+        are reported separately (``verified_positions``), so this stays
+        comparable with the non-speculative engine."""
         return self.decode_tokens / max(1, self.decode_steps)
+
+    @property
+    def accept_rate(self) -> float:
+        """Fraction of proposed draft tokens committed by verification."""
+        return self.draft_accepted / max(1, self.draft_proposed)
 
     @property
     def mean_context(self) -> float:
@@ -160,6 +202,9 @@ class ServingEngine:
         expected_context: Optional[int] = None,  # mean (S + max_new) for the sizer
         mesh=None,  # jax Mesh: shard params/caches via the axis-rules registry
         rules: Optional[dict] = None,  # logical->physical overrides (DEFAULT_RULES base)
+        draft_cfg=None,  # small model proposing spec_k draft tokens per tick
+        draft_params=None,
+        spec_k: int = 0,  # draft tokens per tick (0 = plain decode)
         seed: int = 0,
     ):
         self.cfg = cfg
@@ -199,6 +244,31 @@ class ServingEngine:
                 f"contiguous cache", stacklevel=2)
             self.paged = False
         self.page_size = page_size if self.paged else None
+        # speculative decode: a draft model proposes spec_k tokens per tick
+        # and the target verifies all spec_k + 1 positions in ONE
+        # multi-token decode step (draft positions amortize the weight
+        # stream exactly like batch samples).  Needs positionally-addressed
+        # caches on BOTH models so rejected writes are masked-then-
+        # overwritten instead of rolled back (api.supports_spec_decode).
+        self.spec_k = int(spec_k or 0)
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
+        if self.spec_k:
+            if draft_cfg is None or draft_params is None:
+                raise ValueError("spec_k > 0 needs draft_cfg and draft_params")
+            bad = [c.name for c in (cfg, draft_cfg) if not supports_spec_decode(c)]
+            if bad:
+                import warnings
+
+                warnings.warn(
+                    f"{', '.join(bad)}: speculative decode needs an "
+                    f"attention-only decoder stack (positionally-addressed "
+                    f"caches); serving without speculation", stacklevel=2)
+                self.spec_k = 0
+            elif draft_cfg.vocab != cfg.vocab:
+                raise ValueError(
+                    f"draft vocab {draft_cfg.vocab} != target vocab "
+                    f"{cfg.vocab}: verification compares token ids")
         # the cache stream the sizer charges: per-token bytes at this
         # engine's cache dtype and the *expected* context — max_len for the
         # contiguous cache (the reservation is real traffic: ring length ==
@@ -222,7 +292,11 @@ class ServingEngine:
         if max_batch is None:
             if sizer is None:
                 mp_kw = dict(model_parallel=self.model_parallel,
-                             kv_parallel=self.kv_parallel)
+                             kv_parallel=self.kv_parallel,
+                             spec_k=self.spec_k)
+                if self.spec_k:
+                    mp_kw["draft_n_params"] = get_api(
+                        draft_cfg).n_params_exact(draft_cfg)
                 if plan is not None:
                     # pruning + quantization shrink t_mem: the plan knows the
                     # achieved (b_weight, q_prune, q_overhead), so n_opt
@@ -253,6 +327,9 @@ class ServingEngine:
         self.queue: deque = deque()
         self.stats = EngineStats()
         self._rng = jax.random.key(seed)
+        # host-side RNG for the speculative draft/accept chain (per-slot
+        # temperatures; the jax stream above stays the non-spec sampler)
+        self._np_rng = np.random.default_rng(seed)
         if self.paged:
             self.pages_per_seq = math.ceil(max_len / page_size)
             # default pool: byte parity with the contiguous reservation
@@ -268,13 +345,15 @@ class ServingEngine:
             self.cache = self.api.init_cache(
                 cfg, max_batch, max_len, self.dtype, kv_dtype=self.kv_dtype,
                 page_size=page_size, num_pages=self.num_pages,
+                **self._spec_cache_kw(),
             )
         else:
             self.allocator = None
             self.registry = None
             # one shared cache for the pool; per-slot prefill uses a batch-1 cache
             self.cache = self.api.init_cache(
-                cfg, max_batch, max_len, self.dtype, kv_dtype=self.kv_dtype
+                cfg, max_batch, max_len, self.dtype, kv_dtype=self.kv_dtype,
+                **self._spec_cache_kw(),
             )
         if mesh is None:
             self._decode = jax.jit(
@@ -300,6 +379,63 @@ class ServingEngine:
 
             self._decode = jax.jit(_decode_meshed, donate_argnums=(1,))
             self._prefill1 = jax.jit(_prefill_meshed)
+        # draft side of speculative decode: its own (dense, contiguous-
+        # cache) prefill + single-token decode steps.  The verify step
+        # needs no extra compile plumbing — self._decode re-specializes on
+        # the (B, k+1) token shape, keeping the one-signature-per-step
+        # invariant (one T=k+1 verify signature, one prefill signature,
+        # plus the draft pair).
+        self.draft_api = None
+        self.draft_cache = None
+        if self.spec_k:
+            self.draft_api = get_api(draft_cfg)
+            self.draft_dtype = jnp.dtype(draft_cfg.compute_dtype)
+            self.draft_cache = self.draft_api.init_cache(
+                draft_cfg, max_batch, max_len, self.draft_dtype,
+                spec_k=self.spec_k,
+            )
+            if mesh is None:
+                self._draft_decode = jax.jit(
+                    functools.partial(self.draft_api.decode_step, draft_cfg),
+                    donate_argnums=(1,),
+                )
+                self._draft_prefill1 = jax.jit(
+                    functools.partial(self._prefill_one_impl, draft_cfg))
+            else:
+                # draft params/cache placed once through the same registry;
+                # both draft steps trace under use_mesh like the target's.
+                self.draft_params = jax.device_put(
+                    self.draft_params,
+                    sl.tree_shardings(
+                        self.draft_params,
+                        self.draft_api.param_axes(draft_cfg),
+                        mesh=self.mesh, rules=self.rules))
+                self.draft_cache = jax.device_put(
+                    self.draft_cache,
+                    sl.tree_shardings(
+                        self.draft_cache,
+                        self.draft_api.cache_axes(draft_cfg),
+                        mesh=self.mesh, rules=self.rules))
+
+                def _draft_decode_meshed(params, cache, tokens, pos):
+                    with sl.use_mesh(self.mesh, self.rules):
+                        return self.draft_api.decode_step(
+                            self.draft_cfg, params, cache, tokens, pos)
+
+                def _draft_prefill_meshed(params, batch, cache1):
+                    with sl.use_mesh(self.mesh, self.rules):
+                        return self.draft_api.prefill(
+                            self.draft_cfg, params, batch, cache1)
+
+                self._draft_decode = jax.jit(
+                    _draft_decode_meshed, donate_argnums=(1,))
+                self._draft_prefill1 = jax.jit(_draft_prefill_meshed)
+
+    def _spec_cache_kw(self) -> dict:
+        """Extra init_cache kwargs for speculative mode: widened local
+        rings.  Only passed when speculating — non-transformer families
+        (excluded from speculation) don't take the kwarg."""
+        return {"spec_k": self.spec_k} if self.spec_k else {}
 
     # -- sharded placement (axis-rules registry) ------------------------------
 
@@ -357,7 +493,8 @@ class ServingEngine:
     def _prefill_request(self, req: Request):
         """Run the batch-1 prefill; returns (first sampled token, cache1)."""
         cache1 = self.api.init_cache(
-            self.cfg, 1, self.max_len, self.dtype, kv_dtype=self.kv_dtype
+            self.cfg, 1, self.max_len, self.dtype, kv_dtype=self.kv_dtype,
+            **self._spec_cache_kw(),
         )
         batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
         for k, v in (req.extras or {}).items():
@@ -366,7 +503,24 @@ class ServingEngine:
         tok = self._sample(logits[:, -1], req.temperature)
         return int(tok[0]), cache1
 
+    def _draft_prefill_slot(self, slot: int, req: Request):
+        """Fill the draft model's KV for this request's prompt into its
+        slot of the (always contiguous) draft cache.  The draft's prefill
+        logits are discarded — the target's prefill sampled the first
+        token; the draft only needs the prompt KV so its per-tick decode
+        chain starts from the committed frontier."""
+        cache1 = self.draft_api.init_cache(
+            self.draft_cfg, 1, self.max_len, self.draft_dtype,
+            spec_k=self.spec_k,
+        )
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        _, cache1 = self._draft_prefill1(self.draft_params, batch, cache1)
+        self.draft_cache = jax.tree.map(
+            functools.partial(self._ins_slot, slot), self.draft_cache, cache1)
+
     def _start_slot(self, slot: int, req: Request, S: int, first_tok: int):
+        if self.spec_k:
+            self._draft_prefill_slot(slot, req)
         self.slot_req[slot] = req
         self.slot_pos[slot] = S
         self.slot_remaining[slot] = req.max_new_tokens
@@ -386,7 +540,12 @@ class ServingEngine:
                 break
             req = self.queue.popleft()
             S = len(req.prompt) + self.api.prefix_len(self.cfg)
-            assert S + req.max_new_tokens <= self.max_len, "request exceeds max_len"
+            # spec_k headroom: the last verify tick writes up to spec_k
+            # positions past the final committed token; the ring must never
+            # wrap (a wrapped speculative write would clobber a live early
+            # position that masking cannot recover).
+            assert S + req.max_new_tokens + self.spec_k <= self.max_len, \
+                "request (+ spec_k speculation headroom) exceeds max_len"
             tok, cache1 = self._prefill_request(req)
             self._write_slot(slot, cache1)
             self._start_slot(slot, req, S, tok)
@@ -402,11 +561,14 @@ class ServingEngine:
             S = len(req.prompt) + self.api.prefix_len(self.cfg)
             total = S + req.max_new_tokens
             capacity = self.pages_per_seq * ps
-            if total > capacity:
+            if total + self.spec_k > capacity:
+                # spec_k headroom keeps the verify scatter's page-table
+                # lookups in range; writes past the *allocated* pages land
+                # on NULL_PAGE rows and are absorbed by the null page.
                 raise ValueError(
-                    f"request {req.uid}: S + max_new = {total} exceeds the "
-                    f"page-table capacity {capacity} (pages_per_seq * "
-                    f"page_size); raise max_len")
+                    f"request {req.uid}: S + max_new (+ spec_k) = "
+                    f"{total + self.spec_k} exceeds the page-table capacity "
+                    f"{capacity} (pages_per_seq * page_size); raise max_len")
             prompt_key = tuple(int(t) for t in req.prompt)
             shared_len, shared_pages = (
                 self.registry.match(prompt_key) if self.registry is not None
@@ -541,28 +703,41 @@ class ServingEngine:
             if self.paged:
                 self._free_slot_pages(slot)
 
+    def _publish_table(self, live: List[int], span: int = 0):
+        """COW guard on this tick's write targets (positions
+        [pos, pos + span], possibly straddling page boundaries), then
+        publish the table to the device-side cache pytree (the step reads
+        it; the mapping itself never changes on device)."""
+        ps = self.page_size
+        for slot in live:
+            first = int(self.slot_pos[slot]) // ps
+            last = (int(self.slot_pos[slot]) + span) // ps
+            # pages past the allocated range map to NULL_PAGE (speculative
+            # overrun): nothing to privatize there, the null page absorbs
+            for lp in range(first, min(last, len(self.slot_pages[slot]) - 1) + 1):
+                self._ensure_private(slot, lp)
+        table = jnp.asarray(self._table)
+        if self.mesh is not None:
+            # the table is host-owned per replica: commit it to its
+            # registered layout so the compiled step never resharding-
+            # guesses (the mapping is identical on every model chip)
+            table = jax.device_put(table, sl.named_sharding(
+                self.mesh, table.shape, *sl.axes_for("page_table"),
+                rules=self.rules))
+        self.cache["page_table"] = table
+
     def step(self) -> int:
-        """One engine tick: admit + one batched decode step.  Returns the
-        number of live sequences that decoded this tick."""
+        """One engine tick: admit + one batched decode step (speculative
+        draft + verify when ``spec_k`` > 0).  Returns the number of live
+        sequences that decoded this tick."""
         self._admit()
         live = self._live_slots()
         if not live:
             return 0
+        if self.spec_k:
+            return self._spec_step(live)
         if self.paged:
-            # COW guard on this tick's write targets, then publish the table
-            # to the device-side cache pytree (the step reads it; the
-            # mapping itself never changes on device).
-            for slot in live:
-                self._ensure_private(slot, int(self.slot_pos[slot]) // self.page_size)
-            table = jnp.asarray(self._table)
-            if self.mesh is not None:
-                # the table is host-owned per replica: commit it to its
-                # registered layout so the compiled step never resharding-
-                # guesses (the mapping is identical on every model chip)
-                table = jax.device_put(table, sl.named_sharding(
-                    self.mesh, table.shape, *sl.axes_for("page_table"),
-                    rules=self.rules))
-            self.cache["page_table"] = table
+            self._publish_table(live)
         tokens = jnp.asarray(self.slot_last_tok, jnp.int32)[:, None]
         pos = jnp.asarray(self.slot_pos, jnp.int32)
         logits, self.cache = self._decode(self.params, self.cache, tokens, pos)
@@ -577,6 +752,158 @@ class ServingEngine:
             self._finish_if_done(slot)
         self.stats.decode_steps += 1
         self.stats.decode_tokens += len(live)
+        return len(live)
+
+    # -- speculative decode ---------------------------------------------------
+
+    @staticmethod
+    def _temp_softmax(row: np.ndarray, temperature: float) -> np.ndarray:
+        """softmax(row / temperature) in float64 — the one sampling
+        distribution shared by the draft chain and the accept/resample
+        math (the rejection ratio must use the exact distribution the
+        draft sampled from)."""
+        z = row.astype(np.float64) / temperature
+        z -= z.max()
+        p = np.exp(z)
+        return p / p.sum()
+
+    def _host_sample(self, row: np.ndarray, temperature: float,
+                     dist: Optional[np.ndarray] = None):
+        """Sample one token from a logits row on the host.  Returns
+        (token, its sampling distribution — None for the greedy point
+        mass).  ``dist`` reuses a precomputed ``_temp_softmax``.  Host-side
+        numpy sampling keeps the draft chain's per-slot temperatures
+        independent of the target's jax RNG stream — greedy streams are
+        identical to the non-speculative engine; stochastic streams are
+        distributionally correct but use this separate RNG."""
+        if temperature <= 0.0:
+            return int(np.argmax(row)), None
+        p = self._temp_softmax(row, temperature) if dist is None else dist
+        return int(self._np_rng.choice(p.size, p=p)), p
+
+    def _accept(self, logits_rows: np.ndarray, drafts: np.ndarray,
+                draft_dists: Optional[np.ndarray], temperature: float):
+        """Standard speculative rejection sampling against the verify
+        logits.  logits_rows: (k+1, V) target logits (row j predicts the
+        token after verify input j); drafts: (k,) proposed tokens;
+        draft_dists: (k, V) draft sampling distributions (None under
+        greedy).  Returns (accepted_draft_count, committed tokens) — the
+        accepted draft prefix plus exactly one resampled/bonus token, so
+        even an all-rejected tick commits one token (the tick never
+        stalls).
+
+        Greedy (temperature 0) degenerates to longest-prefix argmax match:
+        the committed stream is bit-identical to the non-speculative
+        engine's.  Stochastically, draft token d is kept with probability
+        min(1, p_target(d) / p_draft(d)) and the first rejection resamples
+        from the residual max(0, p_target - p_draft) — the committed
+        stream is distributed exactly as target-model sampling.
+        """
+        k = drafts.shape[0]
+        if temperature <= 0.0:
+            tgt = np.argmax(logits_rows, axis=-1)  # (k+1,)
+            a = 0
+            while a < k and int(drafts[a]) == int(tgt[a]):
+                a += 1
+            return a, [int(t) for t in tgt[: a + 1]]
+        out: List[int] = []
+        a = 0
+        for j in range(k):
+            p_t = self._temp_softmax(logits_rows[j], temperature)
+            p_d = draft_dists[j]
+            d = int(drafts[j])
+            if self._np_rng.random() < min(1.0, p_t[d] / max(p_d[d], 1e-30)):
+                out.append(d)
+                a += 1
+                continue
+            residual = np.maximum(p_t - p_d, 0.0)
+            tot = residual.sum()
+            if tot <= 0.0:  # distributions identical: any p_t sample works
+                residual, tot = p_t, 1.0
+            out.append(int(self._np_rng.choice(residual.size, p=residual / tot)))
+            return a, out
+        # all k drafts accepted: bonus token from the last verify position
+        tok, _ = self._host_sample(logits_rows[k], temperature)
+        out.append(tok)
+        return a, out
+
+    def _spec_step(self, live: List[int]) -> int:
+        """One speculative tick: k draft-model steps propose tokens, ONE
+        multi-token target step verifies all k+1 positions, the accepted
+        prefix commits.
+
+        Rollback is free by construction: every tick writes the k+1
+        positions starting at the committed frontier, the frontier advances
+        by >= 1, so the stale (rejected) tail of one tick — at most k
+        entries — always lies inside the next tick's write range and is
+        overwritten before the position masks would ever expose it.  The
+        same argument covers the draft cache (its accepted prefix is
+        exactly what it wrote), paged pools (position-identity addressing),
+        and widened local rings (window + spec_k slots; see
+        ``transformer.init_layer_cache``)."""
+        k = self.spec_k
+        B = self.max_batch
+        pos0 = jnp.asarray(self.slot_pos, jnp.int32)
+        # -- draft phase: k sequential single-token steps ---------------------
+        drafts = np.zeros((B, k), np.int64)
+        draft_dists: List[Optional[np.ndarray]] = [None] * B
+        needs_dists = any(
+            self.slot_req[s].temperature > 0.0 for s in live)
+        if needs_dists:
+            draft_dists = [
+                np.zeros((k, self.cfg.vocab)) if self.slot_req[s] is not None
+                else None for s in range(B)]
+        cur = jnp.asarray(self.slot_last_tok, jnp.int32)[:, None]
+        # k+1 draft steps for k proposals: the last step writes the final
+        # draft's KV (its logits are discarded), so after a fully-accepted
+        # tick the draft cache has no hole at the new frontier - 1 — the
+        # accepted prefix is always exactly what the draft itself wrote.
+        for j in range(k + 1):
+            dlogits, self.draft_cache = self._draft_decode(
+                self.draft_params, self.draft_cache, cur, pos0 + j)
+            if j == k:
+                break
+            rows = np.asarray(dlogits[:, 0], np.float32)
+            nxt = np.asarray(self.slot_last_tok).copy()
+            for slot in live:
+                temp = self.slot_req[slot].temperature
+                tok, dist = self._host_sample(rows[slot], temp)
+                drafts[slot, j] = tok
+                nxt[slot] = tok
+                if dist is not None:
+                    draft_dists[slot][j] = dist
+            cur = jnp.asarray(nxt, jnp.int32)[:, None]
+        # -- verify phase: ONE (B, k+1) multi-token target step ---------------
+        if self.paged:
+            self._publish_table(live, span=k)
+        tokens = np.concatenate(
+            [np.asarray(self.slot_last_tok, np.int64)[:, None], drafts], axis=1)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens, jnp.int32), pos0)
+        arr = np.asarray(logits, np.float32)  # (B, k+1, V)
+        # -- commit the accepted prefix (+ the guaranteed bonus token) --------
+        committed_total = 0
+        for slot in live:
+            req = self.slot_req[slot]
+            remaining = int(self.slot_remaining[slot])
+            a, toks = self._accept(
+                arr[slot], drafts[slot], draft_dists[slot], req.temperature)
+            c = min(len(toks), remaining)
+            toks = toks[:c]
+            self.stats.draft_proposed += k
+            # committed drafts: toks is [d_1..d_a, bonus]; truncation by
+            # remaining can clip the bonus, in which case ALL c committed
+            # tokens are accepted drafts (min handles both cases)
+            self.stats.draft_accepted += min(a, c)
+            req.output.extend(toks)
+            self.slot_last_tok[slot] = toks[-1]
+            self.slot_pos[slot] += c
+            self.slot_remaining[slot] -= c
+            committed_total += c
+            self._finish_if_done(slot)
+        self.stats.decode_steps += 1
+        self.stats.decode_tokens += committed_total
+        self.stats.verified_positions += len(live) * (k + 1)
         return len(live)
 
     def run_until_done(self, max_ticks: int = 10000) -> EngineStats:

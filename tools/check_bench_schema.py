@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""CI bench-schema lint: the machine-readable output of
+``benchmarks/run.py --json`` must keep its documented shape.
+
+The JSON artifact is diffed between perf PRs; a silently renamed field or
+a row that stops carrying ``us_per_call`` would corrupt every downstream
+comparison without failing anything.  This validator pins the schema:
+
+    {"schema_version": 1, "smoke": bool, "failed": [str],
+     "rows": [{"bench": str, "name": str,
+               "us_per_call": float | null, "derived": str}]}
+
+Usage:
+
+    python tools/check_bench_schema.py out.json   # validate a real run
+    python tools/check_bench_schema.py --selftest # docs-lint mode: golden
+                                                  # accept + rot-reject
+
+``--selftest`` needs no bench run (it validates a built-in golden document
+and confirms a malformed one is rejected), so the docs-lint CI step can
+gate schema rot before the benches execute.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+SCHEMA_VERSION = 1
+
+ROW_FIELDS = {
+    "bench": (str,),
+    "name": (str,),
+    "us_per_call": (float, int, type(None)),
+    "derived": (str,),
+}
+
+
+def validate(doc: object) -> list[str]:
+    """Return a list of schema violations (empty = valid)."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return [f"top level must be an object, got {type(doc).__name__}"]
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        errs.append(
+            f"schema_version must be {SCHEMA_VERSION}, "
+            f"got {doc.get('schema_version')!r}")
+    if not isinstance(doc.get("smoke"), bool):
+        errs.append(f"smoke must be a bool, got {doc.get('smoke')!r}")
+    failed = doc.get("failed")
+    if not (isinstance(failed, list) and all(isinstance(f, str) for f in failed)):
+        errs.append(f"failed must be a list of strings, got {failed!r}")
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        return errs + [f"rows must be a list, got {type(rows).__name__}"]
+    if not rows and not failed:
+        errs.append("rows is empty but no bench failed: runner rot?")
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errs.append(f"rows[{i}] must be an object")
+            continue
+        for field, types in ROW_FIELDS.items():
+            if field not in row:
+                errs.append(f"rows[{i}] missing field {field!r}")
+            elif not isinstance(row[field], types):
+                errs.append(
+                    f"rows[{i}].{field} must be "
+                    f"{' | '.join(t.__name__ for t in types)}, "
+                    f"got {type(row[field]).__name__}")
+        extra = set(row) - set(ROW_FIELDS)
+        if extra:
+            errs.append(f"rows[{i}] has undocumented fields {sorted(extra)}")
+    return errs
+
+
+GOLDEN = {
+    "schema_version": SCHEMA_VERSION,
+    "smoke": True,
+    "failed": [],
+    "rows": [
+        {"bench": "decode", "name": "decode/bytes_per_token",
+         "us_per_call": 12.5, "derived": "modeled=measured"},
+        {"bench": "nopt", "name": "nopt/zynq", "us_per_call": None,
+         "derived": "n_opt=12.66"},
+    ],
+}
+
+
+def selftest() -> int:
+    errs = validate(GOLDEN)
+    if errs:
+        print("bench-schema: golden document rejected (validator rot?):")
+        for e in errs:
+            print(f"  {e}")
+        return 1
+    rotted = json.loads(json.dumps(GOLDEN))
+    rotted["rows"][0].pop("us_per_call")
+    rotted["rows"][1]["extra"] = 1
+    if len(validate(rotted)) < 2:
+        print("bench-schema: malformed document passed (validator rot?)")
+        return 1
+    print("bench-schema: selftest ok (golden accepted, rot rejected)")
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    if argv == ["--selftest"]:
+        return selftest()
+    if len(argv) != 1:
+        print(__doc__)
+        return 2
+    with open(argv[0]) as f:
+        doc = json.load(f)
+    errs = validate(doc)
+    if errs:
+        for e in errs:
+            print(f"bench-schema: {argv[0]}: {e}")
+        return 1
+    print(f"bench-schema: {argv[0]} ok "
+          f"({len(doc['rows'])} rows, {len(doc['failed'])} failed)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
