@@ -13,7 +13,11 @@ bench sweeps both axes on a smoke-size transformer and reports, per cell:
     actually materializes, not what the model hopes;
   * the kv-aware machine-balance n_opt — the acceptance check that the
     int8 cache shifts n_opt exactly where ``decode_step_time``'s two-term
-    balance predicts (the bench asserts t_calc == t_mem at n_opt).
+    balance predicts (the bench asserts t_calc == t_mem at n_opt);
+  * the attention-stream cell — the single-pass multi-query kernel streams
+    each KV page once per speculative tick, so modeled page bytes per tick
+    drop by exactly (k+1)x vs per-position re-fetch, with the balance
+    ratio still 1.00 at ``spec_decode_n_opt`` (asserted).
 """
 
 from __future__ import annotations
@@ -95,6 +99,36 @@ def main(smoke: bool = False) -> None:
             f"decode/nopt_shift/kv_{kv_name}", None,
             f"n_opt={n:.1f} kv_B/tok={kv_tok:.0f} ctx={ctx} "
             f"balance={t['t_calc'] / t['t_mem']:.2f}",
+        )
+
+    # attention-stream cell: the single-pass multi-query kernel streams each
+    # KV page ONCE per speculative tick — all k+1 verify positions score the
+    # page on-chip — so the modeled page bytes per tick drop by exactly
+    # (k+1)x vs the per-position re-fetch datapath, and the machine balance
+    # (t_calc == t_mem) must still hold exactly at the model's own
+    # spec_decode_n_opt.  Pure model math (the kernel-side parity is pinned
+    # in tests/test_mq_paged_attention.py); asserted, not just reported.
+    kv_int8 = 2.0 * (kvh * hd + 4 * kvh) * n_l
+    for k in (3,) if smoke else (1, 3, 7):
+        bytes_refetch = (k + 1) * ctx * kv_int8  # per sequence per tick
+        bytes_single = ctx * kv_int8
+        ratio = bytes_refetch / bytes_single
+        assert ratio == k + 1, (ratio, k)
+        n = pm.spec_decode_n_opt(
+            k, b_weight=1.0, n_params=np_big, kv_bytes_per_token=kv_int8,
+            context_len=ctx)
+        # balance at the UNROUNDED n_opt: the verify step runs n*(k+1)
+        # positions with the page stream charged once (kv/(k+1) per
+        # position) — t_calc/t_mem == 1.00 by construction of the model
+        t = pm.decode_step_time(
+            np_big, n * (k + 1), kv_int8 / (k + 1), ctx, b_weight=1.0)
+        balance = t["t_calc"] / t["t_mem"]
+        assert abs(balance - 1.0) < 1e-9, balance
+        emit(
+            f"decode/attn_stream/k{k}", None,
+            f"page_B/tick/seq={bytes_single:.0f} refetch_B/tick/seq="
+            f"{bytes_refetch:.0f} drop={ratio:.1f}x n_opt={n:.1f} "
+            f"balance={balance:.2f}",
         )
 
     for q in q_sweep:

@@ -16,6 +16,11 @@ Reports, on TPU v5e constants at the PR-2 compressed serving point:
   * committed tokens per weight-stream pass across acceptance rates at
     fixed k — asserted strictly increasing in alpha (the acceptance
     criterion: tokens/s per weight stream improves with acceptance rate);
+  * the single-pass page-stream row — the multi-query kernel streams each
+    KV page once per tick, so the kv bytes per committed token drop by
+    (k+1)x vs the per-position re-fetch accounting
+    (``single_pass_kv=False``), and the balance batch shifts accordingly
+    (asserted);
   * the k sweep at a realistic alpha, including the draft-model cost
     (k sequential small-model steps per tick), showing the optimum k.
 
@@ -60,6 +65,21 @@ def main(smoke: bool = False) -> None:
          f"n_opt={spec_n:.1f} == plain {base_n:.1f}; "
          f"tok/s={s0['tokens_per_s']:.0f} == plain "
          f"{b / t_plain['t_proc']:.0f} (asserted)")
+
+    # -- single-pass page stream: kv bytes charged once per tick ----------
+    k, alpha = 4, 0.75
+    e = pm.expected_committed(alpha, k)
+    kv_per_commit_new = CTX * KV_TOK / e  # one page stream per tick
+    kv_per_commit_old = (k + 1) * CTX * KV_TOK / e  # per-position re-fetch
+    assert np.isclose(kv_per_commit_old / kv_per_commit_new, k + 1)
+    n_new = pm.spec_decode_n_opt(k, **KW)
+    n_old = pm.spec_decode_n_opt(k, single_pass_kv=False, **KW)
+    # amortizing the page stream shrinks the kv tilt on the balance point
+    assert n_new < n_old, (n_new, n_old)
+    emit(f"speculative_serving/single_pass/k{k}", None,
+         f"kv_B/committed={kv_per_commit_new:.0f} (refetch "
+         f"{kv_per_commit_old:.0f}, drop {k + 1}x at a={alpha}) "
+         f"B_opt={n_new:.1f} (refetch {n_old:.1f})")
 
     # -- acceptance sweep at fixed k: committed tokens per weight stream --
     k = 4

@@ -169,11 +169,13 @@ class BatchSizer:
     model_parallel: int = 1
     kv_parallel: int | None = None
     # speculative decode (perf_model.spec_decode_n_opt): k draft tokens per
-    # tick make the verify step's effective sample batch B * (k+1), so the
-    # machine-balance *sequence* batch divides by (k+1); spec_accept is the
-    # expected per-draft acceptance rate, which converts verified positions
-    # into committed tokens (throughput reporting only — it does not move
-    # the balance point, rejected positions are still streamed).
+    # tick make the verify step's effective sample batch B * (k+1) on the
+    # compute side, while the KV page stream is charged once per tick
+    # (single-pass multi-query kernel); spec_accept is the expected
+    # per-draft acceptance rate, which converts verified positions into
+    # committed tokens (throughput reporting only — it does not move the
+    # balance point, rejected positions are still streamed).  The engine
+    # feeds measured acceptance back via ``observe_accept``.
     # draft_n_params sizes the k+1 sequential draft steps per tick so the
     # latency clamp charges the whole tick, not just the verify step.
     spec_k: int = 0
@@ -216,14 +218,37 @@ class BatchSizer:
         UNBOUNDED_NOPT sentinel, not a real balance point."""
         return self.n_opt >= UNBOUNDED_NOPT
 
+    def observe_accept(self, accept_rate: float, ema: float = 0.2) -> "BatchSizer":
+        """Fold one tick's measured acceptance into ``spec_accept`` (EMA).
+
+        Returns an updated copy (frozen dataclass) — the engine reassigns
+        its sizer after each speculative tick, so ``committed_per_tick``
+        and throughput reporting track observed traffic instead of the
+        configured prior.  A fresh sizer (spec_accept == 0) adopts the
+        first measurement outright.
+        """
+        if not 0.0 <= accept_rate <= 1.0:
+            raise ValueError(f"accept_rate must be in [0,1], got {accept_rate}")
+        if self.spec_accept <= 0.0:
+            new = accept_rate
+        else:
+            new = (1.0 - ema) * self.spec_accept + ema * accept_rate
+        return dataclasses.replace(self, spec_accept=new)
+
     def step_time(self, batch: int, context_len: int | None = None,
                   kv_bytes_per_token: float | None = None) -> float:
         # a speculative tick's verify step runs batch * (k+1) verified
-        # positions through the weight stream — charge them all
+        # positions through the weight stream — charge them all.  The KV
+        # page stream is charged ONCE per tick (single-pass multi-query
+        # kernel): per-position kv divides by (k+1) so kv_read stays the
+        # plain-decode batch * ctx * kv_tok (perf_model.spec_step_time).
+        kv = self.kv_bytes_per_token if kv_bytes_per_token is None else kv_bytes_per_token
+        if self.spec_k > 0:
+            kv = kv / (self.spec_k + 1)
         t = pm.decode_step_time(
             self.n_params,
             batch * (self.spec_k + 1) if self.spec_k > 0 else batch,
-            self.kv_bytes_per_token if kv_bytes_per_token is None else kv_bytes_per_token,
+            kv,
             self.context_len if context_len is None else context_len,
             self.peak_flops,
             self.hbm_bw,

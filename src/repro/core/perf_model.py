@@ -385,32 +385,43 @@ def spec_decode_n_opt(
     context_len: int = 0,
     model_parallel: int = 1,
     kv_parallel: int | None = None,
+    single_pass_kv: bool = True,
 ) -> float:
     """Machine-balance *sequence* batch for the speculative verify step.
 
     Draft tokens are extra samples of the paper's batch processing: one
     verify step pushes B * (k+1) rows (k drafts + the committed token per
-    sequence) through one weight stream, and each verified position pays
-    its own per-sample kv read.  Both the compute term and the kv term of
-    ``decode_n_opt`` therefore scale with the *verified-position* batch
-    B * (k+1), so the two-term balance sits at
+    sequence) through one weight stream.  The compute term scales with the
+    verified-position batch B * (k+1); with the single-pass multi-query
+    kernel (``single_pass_kv=True``, the shipped datapath) the KV page
+    stream does NOT — each page crosses HBM once per tick and all k+1
+    positions score against it on-chip, so the kv term stays the plain-
+    decode per-sequence read.  Solving t_calc == t_mem:
 
-        B_opt = decode_n_opt(...) / (k + 1)
+        t_calc = 2*comp*n*(k+1) / (m*peak)
+        t_mem  = (W/m + n*ctx*kv/kv_m) / hbm
+        B_opt  = (W/hbm) / ((k+1)*2*comp/peak - (m/kv_m)*ctx*kv/hbm)
 
-    — the verify step reaches the machine-balance point with (k+1)x fewer
-    concurrent sequences, which is exactly why speculation helps a
-    latency-capped engine that cannot fill n_opt slots.  The acceptance
-    rate does not move the balance point (rejected positions still
-    streamed and verified); it enters through ``expected_committed``,
-    which converts verified positions into committed tokens/s.  The
-    memory-bound-at-any-batch sentinel (inf) passes through unchanged.
+    which equals ``decode_n_opt(kv_bytes_per_token / (k+1)) / (k+1)`` —
+    the kv tilt on the balance point no longer grows with k.
+    ``single_pass_kv=False`` models the per-position re-fetch datapath
+    (kv charged k+1 times per tick; both terms scale together and B_opt =
+    decode_n_opt / (k+1) exactly), kept for before/after comparisons in
+    the benches.  The acceptance rate does not move the balance point
+    (rejected positions still streamed and verified); it enters through
+    ``expected_committed``, which converts verified positions into
+    committed tokens/s.  The memory-bound-at-any-batch sentinel (inf)
+    passes through unchanged — note single-pass makes it strictly harder
+    to hit (the kv stream must now exceed (k+1)x the compute budget).
     """
     if spec_k < 0:
         raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+    kv = kv_bytes_per_token
+    if single_pass_kv:
+        kv = kv / (spec_k + 1)
     n = decode_n_opt(
         peak_flops, hbm_bw, b_weight, q_prune, q_overhead, sparse_compute,
-        n_params, kv_bytes_per_token, context_len, model_parallel,
-        kv_parallel,
+        n_params, kv, context_len, model_parallel, kv_parallel,
     )
     return n / (spec_k + 1)
 
@@ -426,13 +437,21 @@ def spec_step_time(
     peak_flops: float = TPU_V5E_PEAK_FLOPS,
     hbm_bw: float = TPU_V5E_HBM_BW,
     b_weight: float = 2.0,
+    single_pass_kv: bool = True,
     **kw,
 ) -> dict:
     """Two-term model of one speculative tick: k draft steps + one verify.
 
     The verify step is ``decode_step_time`` at the verified-position batch
-    ``batch * (k+1)`` — B*(k+1) rows through one target weight stream, kv
-    charged per verified position.  The draft model (``draft_n_params``,
+    ``batch * (k+1)`` — B*(k+1) rows through one target weight stream.
+    With the single-pass multi-query kernel (``single_pass_kv=True``, the
+    shipped datapath) the kv stream is charged ONCE per tick — kv_read =
+    batch * ctx * kv_tok, the plain-decode read, because all k+1 positions
+    score each page while it sits on-chip; modeled by handing the verify
+    step ``kv_bytes_per_token / (k+1)`` per position (the kv term is
+    linear, so kv_parallel accounting is untouched).  ``False`` restores
+    the per-position re-fetch accounting ((k+1)x kv per tick) for
+    before/after comparisons.  The draft model (``draft_n_params``,
     streamed at the same ``b_weight``) runs k sequential single-token
     steps at batch B; its kv stream is folded into its weight stream ratio
     and omitted (drafts are small by construction — the term that matters
@@ -446,8 +465,11 @@ def spec_step_time(
                               the target weight stream — the paper's reuse
                               factor, now acceptance-scaled.
     """
+    kv = kv_bytes_per_token
+    if single_pass_kv:
+        kv = kv / (spec_k + 1)
     verify = decode_step_time(
-        n_params, batch * (spec_k + 1), kv_bytes_per_token, context_len,
+        n_params, batch * (spec_k + 1), kv, context_len,
         peak_flops, hbm_bw, b_weight, **kw)
     t_draft = 0.0
     if spec_k > 0 and draft_n_params > 0:

@@ -179,7 +179,7 @@ def flash_attention(
 
 
 # ---------------------------------------------------------------------------
-# paged decode attention: K/V tiles fetched via page-table indirection
+# multi-query paged decode attention: each KV page streamed ONCE per step
 # ---------------------------------------------------------------------------
 #
 # The decode-time analogue of the block-sparse walk: the page table is a
@@ -187,20 +187,27 @@ def flash_attention(
 # grid step's BlockSpec index_map computes the *physical* page to DMA from
 # the logical (sequence, page) coordinate — the offset-calculation IP of the
 # paper's sparse stream, applied to the KV cache.  Only the pages a sequence
-# actually owns cross HBM; the pure-JAX reference (models/layers.
-# paged_decode_attention) materializes the same gather per step instead.
+# actually owns cross HBM, and every page crosses exactly once per step no
+# matter how many query positions T the step carries: all T positions of a
+# speculative verify tick score against the page while it sits in VMEM
+# (batch processing along the token axis, applied to the cache stream the
+# way the weight kernels already apply it to the weight stream).  The
+# pure-JAX reference (models/layers.paged_decode_attention) materializes
+# the same gather per step instead.
 
 
 def _paged_decode_kernel(
     pt_ref,  # (B * P,) scalar prefetch: flattened page table
-    pos_ref,  # (B,)    scalar prefetch: per-sequence decode position
-    q_ref,  # (1, G, hd)
+    pos_ref,  # (B,)    scalar prefetch: position of each sequence's q[:, 0]
+    q_ref,  # (1, T * G, hd) — rows interleave (query offset t, group g)
     k_ref,  # (1, ps, 1, hd) one physical page, one kv head
     v_ref,
     *refs,  # [ks_ref (1, ps, 1), vs_ref], o_ref, m_ref, l_ref, acc_ref
     pages_per_seq: int,
     page_size: int,
     kv_heads: int,
+    groups: int,
+    causal: bool,
     window: int,
     scale: float,
     softcap: float,
@@ -220,30 +227,35 @@ def _paged_decode_kernel(
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32) * scale  # (G, hd)
+    q = q_ref[0].astype(jnp.float32) * scale  # (T*G, hd)
     k = k_ref[0, :, 0, :].astype(jnp.float32)  # (ps, hd)
     if quantized_kv:
         k = k * ks_ref[0].reshape(page_size, 1).astype(jnp.float32)
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (G, ps)
+    )  # (T*G, ps)
     if softcap > 0.0:
         s = jnp.tanh(s / softcap) * softcap
 
     pos = pos_ref[b]
     kv_pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    # logical-position masking: entries beyond pos — including every slot of
-    # logical pages the sequence has not reached (their table entries point
-    # at the null page) — never contribute.
-    mask = kv_pos <= pos
+    # per-query masking: row (t, g) is query position pos + t, and entries
+    # beyond it — including every slot of logical pages the sequence has
+    # not reached (their table entries point at the null page) — never
+    # contribute.  Non-causal (cross-attention) steps see everything up to
+    # pos from every query row.
+    q_pos = pos
+    if causal:
+        q_pos = pos + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // groups
+    mask = kv_pos <= q_pos
     if window > 0:
-        mask &= kv_pos > pos - window
+        mask &= kv_pos > q_pos - window
     s = jnp.where(mask, s, -1e30)
 
-    m_prev = m_ref[...]  # (G, 1)
+    m_prev = m_ref[...]  # (T*G, 1)
     m_new = jnp.maximum(m_prev[:, 0], s.max(axis=1))[:, None]
     alpha = jnp.exp(m_prev - m_new)
-    pexp = jnp.exp(s - m_new)  # (G, ps)
+    pexp = jnp.exp(s - m_new)  # (T*G, ps)
     l_ref[...] = l_ref[...] * alpha + pexp.sum(axis=1)[:, None]
     v = v_ref[0, :, 0, :].astype(jnp.float32)
     if quantized_kv:
@@ -259,28 +271,36 @@ def _paged_decode_kernel(
 
 
 def paged_decode_attention(
-    q: jax.Array,  # (B, 1, H, hd)
+    q: jax.Array,  # (B, T, H, hd) — T=1 decode, T=k+1 speculative verify
     k_pages: jax.Array,  # (num_pages, page_size, KVH, hd)
     v_pages: jax.Array,
     page_table: jax.Array,  # (B, pages_per_seq) int32
-    pos: jax.Array,  # (B,) int32
+    pos: jax.Array,  # (B,) int32, position of q[:, 0]
     *,
+    causal: bool = True,
     window: int | None = None,
     softcap: float = 0.0,
     k_scale_pages: jax.Array | None = None,  # (num_pages, page_size, KVH)
     v_scale_pages: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """One decode step of attention against the paged KV cache.
+    """Single-pass multi-query attention against the paged KV cache.
 
     Grid (B * KVH, pages_per_seq), pages innermost: the online-softmax
     (m, l, acc) statistics live in VMEM scratch across each sequence's page
     sweep, and the K/V page for step (bh, p) is addressed through the
     prefetched page table — pages a sequence doesn't own are never fetched
-    into VMEM (the null page rides on masked positions only).  The int8
-    scale pools select dequant-on-load, mirroring the contiguous kernel.
+    into VMEM (the null page rides on masked positions only).  All T query
+    positions fold into the q-tile rows as (t, group) pairs, so each page
+    is DMA'd exactly once per step and scored against every query while it
+    sits in VMEM — the verify step's page-stream cost is independent of T.
+    Row t's causal mask is ``kv_pos <= pos + t`` (entries the verify step
+    already wrote at positions > pos + t mask out); ``causal=False`` gives
+    every row the full [0, pos] view (enc-dec cross-attention against a
+    static encoder pool).  The int8 scale pools select dequant-on-load,
+    mirroring the contiguous kernel.
     """
-    B, _, H, hd = q.shape
+    B, T, H, hd = q.shape
     num_pages, page_size, KVH, _ = k_pages.shape
     P = page_table.shape[1]
     G = H // KVH
@@ -288,13 +308,19 @@ def paged_decode_attention(
     assert (k_scale_pages is None) == (v_scale_pages is None)
     scale = 1.0 / math.sqrt(hd)
 
-    qf = q[:, 0].reshape(B, KVH, G, hd).reshape(B * KVH, G, hd)
+    # fold (B, KVH) into the grid axis and (T, G) into the q-tile rows:
+    # row t * G + g of sequence-head (b, kvh) is query position pos[b] + t
+    qf = (
+        q.reshape(B, T, KVH, G, hd)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(B * KVH, T * G, hd)
+    )
     pt_flat = page_table.reshape(-1).astype(jnp.int32)
 
     kernel = functools.partial(
         _paged_decode_kernel,
-        pages_per_seq=P, page_size=page_size, kv_heads=KVH,
-        window=window or 0, scale=scale, softcap=softcap,
+        pages_per_seq=P, page_size=page_size, kv_heads=KVH, groups=G,
+        causal=causal, window=window or 0, scale=scale, softcap=softcap,
         quantized_kv=quantized_kv,
     )
 
@@ -305,7 +331,7 @@ def paged_decode_attention(
         return (pt[(bh // KVH) * P + p], 0, bh % KVH, 0)
 
     in_specs = [
-        pl.BlockSpec((1, G, hd), q_index),
+        pl.BlockSpec((1, T * G, hd), q_index),
         pl.BlockSpec((1, page_size, 1, hd), kv_index),
         pl.BlockSpec((1, page_size, 1, hd), kv_index),
     ]
@@ -322,17 +348,19 @@ def paged_decode_attention(
         num_scalar_prefetch=2,
         grid=(B * KVH, P),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, G, hd), q_index),
+        out_specs=pl.BlockSpec((1, T * G, hd), q_index),
         scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((T * G, 1), jnp.float32),
+            pltpu.VMEM((T * G, 1), jnp.float32),
+            pltpu.VMEM((T * G, hd), jnp.float32),
         ],
     )
     of = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B * KVH, G, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B * KVH, T * G, hd), q.dtype),
         interpret=interpret,
     )(pt_flat, pos.astype(jnp.int32), *operands)
-    return of.reshape(B, KVH, G, hd).reshape(B, 1, H, hd)
+    return (
+        of.reshape(B, KVH, T, G, hd).transpose(0, 2, 1, 3, 4).reshape(B, T, H, hd)
+    )

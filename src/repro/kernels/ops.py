@@ -231,29 +231,61 @@ def paged_decode_attention(
     dequant-on-load.  No padding needed: page geometry is static.
 
     ``q`` may carry T > 1 new tokens per sequence (the speculative verify
-    step).  The kernel itself is single-position; position t re-runs it
-    with ``pos + t`` as its newest entry, which reproduces the reference's
-    per-query causal mask exactly — entries the verify step already wrote
-    at positions > pos + t sit beyond that call's newest position and mask
-    out.  The page stream is re-fetched per position; the weight-stream
-    amortization of speculation lives in the matmul kernels (which see all
-    B*T rows at once), not here.
+    step).  All T positions fold into the kernel's q-tile rows, so the step
+    lowers to ONE ``pallas_call`` that streams each KV page exactly once and
+    scores every query position against it on-chip — the page stream is
+    amortized across the verify batch the same way the matmul kernels
+    amortize the weight stream across B*T rows.  Per-query causality is the
+    kernel's mask: row t sees entries ≤ pos + t, so entries the verify step
+    already wrote at positions > pos + t mask out, bit-identical to running
+    the single-query kernel once per position.
     """
     if interpret is None:
         interpret = not _on_tpu()
-    one = functools.partial(
-        _fa.paged_decode_attention, window=window, softcap=softcap,
+    return _fa.paged_decode_attention(
+        q, k_pages, v_pages, page_table, pos,
+        causal=True, window=window, softcap=softcap,
         k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
         interpret=interpret,
     )
-    T = q.shape[1]
-    if T == 1:
-        return one(q, k_pages, v_pages, page_table, pos)
-    outs = [
-        one(q[:, t : t + 1], k_pages, v_pages, page_table, pos + t)
-        for t in range(T)
-    ]
-    return jnp.concatenate(outs, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def cross_decode_attention(
+    q: jax.Array,  # (B, T, H, hd)
+    k: jax.Array,  # (B, Sf, KVH, hd) static encoder K
+    v: jax.Array,
+    softcap: float = 0.0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Decode-time enc-dec cross-attention through the single-pass kernel.
+
+    The encoder K/V are a static pool: every decode step re-reads the same
+    (B, Sf) entries.  Reshaping them into page-sized tiles with an identity
+    page table reuses the multi-query paged kernel, so all T query positions
+    of a step score against each encoder tile while it sits in VMEM — one
+    stream of the encoder cache per step, independent of T.  ``causal=False``
+    with pos = Sf - 1 gives every query row the full encoder view; padded
+    frame slots sit at positions ≥ Sf and mask out.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, T, H, hd = q.shape
+    Sf = k.shape[1]
+    KVH = k.shape[2]
+    page_size = min(128, max(8, Sf))
+    kp = _pad_dim(k, 1, page_size)
+    vp = _pad_dim(v, 1, page_size)
+    P = kp.shape[1] // page_size
+    k_pool = kp.reshape(B * P, page_size, KVH, hd)
+    v_pool = vp.reshape(B * P, page_size, KVH, hd)
+    # identity table: sequence b's logical page p is physical page b*P + p
+    table = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)
+    pos = jnp.full((B,), Sf - 1, dtype=jnp.int32)
+    return _fa.paged_decode_attention(
+        q, k_pool, v_pool, table, pos,
+        causal=False, softcap=softcap, interpret=interpret,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "block_n", "block_k", "interpret"))

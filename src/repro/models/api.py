@@ -123,9 +123,12 @@ def supports_spec_decode(cfg) -> bool:
     position, so rejected speculative writes are simply masked until the
     next verify step overwrites them.  O(1) recurrent / xLSTM states are
     sequential integrators with no position axis — a rejected token's
-    update cannot be undone without snapshotting the state — and the
-    VLM / enc-dec decoders don't thread multi-position decode.  So:
-    decoder-only transformer stacks whose layers are all attention."""
+    update cannot be undone without snapshotting the state.  The enc-dec
+    decoder now threads multi-position decode (single-pass cross-attention),
+    but the engine's draft prefill carries tokens only (no frames/patches)
+    and the VLM/enc-dec caches don't size for the verify overhang
+    (``init_cache(..., spec_k=)``), so speculation stays transformer-only:
+    decoder-only stacks whose layers are all attention."""
     if get_api(cfg) is not _TRANSFORMER_API:
         return False
     kinds = getattr(cfg, "layer_kinds", ()) or ()

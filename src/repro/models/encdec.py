@@ -106,13 +106,20 @@ def _self_block(cfg, p, x, *, causal, mode="train", cache=None, pos=None):
     return x + a, new_cache
 
 
-def _cross_block(cfg, p, x, enc_kv):
+def _cross_block(cfg, p, x, enc_kv, mode="train"):
     h = L.apply_norm(p["lnx"], x, "layernorm")
     B, S, _ = h.shape
     H, hd = cfg.n_heads, cfg.hd
     dt = h.dtype
     q = L.qdense(h, p["xattn"]["wq"]).reshape(B, S, H, hd)
-    o = L.attention(q, enc_kv["k"].astype(dt), enc_kv["v"].astype(dt), causal=False)
+    if mode == "decode":
+        # decode-time cross-attention streams the static encoder pool once
+        # per step through the single-pass multi-query kernel — all S query
+        # positions of a multi-token step score against each encoder tile
+        # while it sits on-chip (layers.cross_decode_attention dispatch).
+        o = L.cross_decode_attention(q, enc_kv["k"].astype(dt), enc_kv["v"].astype(dt))
+    else:
+        o = L.attention(q, enc_kv["k"].astype(dt), enc_kv["v"].astype(dt), causal=False)
     return x + L.qdense(o.reshape(B, S, H * hd), p["xattn"]["wo"])
 
 
@@ -243,15 +250,24 @@ def prefill(cfg, params, tokens, frames, cache):
 
 
 def decode_step(cfg, params, cache, tokens, pos):
-    """One decoder step against self+cross caches.  tokens (B,1), pos (B,)."""
-    B = tokens.shape[0]
+    """One decoder step against self+cross caches.  tokens (B, T), pos (B,)
+    the position of tokens[:, 0] — T=1 is the classic step; T>1 threads a
+    multi-token span through the same single-pass attention paths as the
+    transformer families (self-attn verify masking in decode_attention,
+    cross-attn via the multi-query kernel)."""
+    B, T = tokens.shape
     x = L.embed_tokens(cfg, params["embed"], tokens)
-    x = x + jnp.take(params["pos_dec"], jnp.minimum(pos, params["pos_dec"].shape[0] - 1), axis=0)[:, None].astype(x.dtype)
+    positions = pos[:, None] + jnp.arange(T)[None]  # (B, T)
+    x = x + jnp.take(
+        params["pos_dec"],
+        jnp.minimum(positions, params["pos_dec"].shape[0] - 1),
+        axis=0,
+    ).astype(x.dtype)
 
     def body(x, xs):
         p, c = xs
         x, nc = _self_block(cfg, p, x, causal=True, mode="decode", cache={"k": c["k"], "v": c["v"]}, pos=pos)
-        x = _cross_block(cfg, p, x, {"k": c["xk"], "v": c["xv"]})
+        x = _cross_block(cfg, p, x, {"k": c["xk"], "v": c["xv"]}, mode="decode")
         h = L.apply_norm(p["ln2"], x, "layernorm")
         x = x + L.apply_mlp(cfg, p["mlp"], h)
         return x, nc

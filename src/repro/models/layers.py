@@ -441,9 +441,13 @@ def decode_attention(
             preferred_element_type=jnp.float32,
         ) * scale
     else:
+        # int8 cache operands stay int8 in the contraction (mixed-dtype dot
+        # with f32 accumulation); the per-slot scales fold into the (B, KVH,
+        # G, T, S) score tensor afterwards.  Casting the cache first would
+        # materialize a full fp copy of it in HBM every step.
         s = jnp.einsum(
-            "btkgd,bskd->bkgts", qg.astype(jnp.float32),
-            k_cache.astype(jnp.float32), preferred_element_type=jnp.float32,
+            "btkgd,bskd->bkgts", qg.astype(jnp.float32), k_cache,
+            preferred_element_type=jnp.float32,
         ) * scale
         s = s * k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, None, :]
     s = _softcap(s, softcap)
@@ -462,10 +466,12 @@ def decode_attention(
             preferred_element_type=jnp.float32,
         )
     else:
+        # p @ (v*s) == (p*s) @ v: the scales ride on the probability tensor,
+        # so the int8 V cache is contracted as-is (no fp cast of the cache).
         o = jnp.einsum(
             "bkgts,bskd->btkgd",
             p * v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, None, :],
-            v_cache.astype(jnp.float32),
+            v_cache,
             preferred_element_type=jnp.float32,
         )
     return o.reshape(B, T, H, hd).astype(q.dtype)
@@ -750,6 +756,23 @@ def gather_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
     return g.reshape((B, P * ps) + g.shape[3:])
 
 
+# Process-wide override for the kernel-vs-gather dispatch below.  Tests use
+# it to force the (interpret-mode) Pallas datapath through whole engine runs
+# off-TPU, where per-call plumbing can't reach (decode steps are jit'd
+# closures created inside the engine).  None = no override.
+_FORCE_KERNEL: Optional[bool] = None
+
+
+def force_attention_kernel(value: Optional[bool]) -> Optional[bool]:
+    """Set the process-wide kernel-dispatch override; returns the previous
+    value so callers can restore it (try/finally).  Takes effect at trace
+    time — call before the first decode step of the run being forced."""
+    global _FORCE_KERNEL
+    prev = _FORCE_KERNEL
+    _FORCE_KERNEL = value
+    return prev
+
+
 def paged_decode_attention(
     q: jax.Array,  # (B, T, H, hd) — T=1 decode, T=k+1 speculative verify
     k_pages: jax.Array,  # (num_pages, ps, KVH, hd)
@@ -765,7 +788,8 @@ def paged_decode_attention(
 ) -> jax.Array:
     """Attention for T new tokens per sequence through the page table.
 
-    Two numerically-matching datapaths (parity in tests/test_paged_cache.py):
+    Two numerically-matching datapaths (parity in tests/test_paged_cache.py
+    and tests/test_mq_paged_attention.py):
 
     * **gather reference** (portable pure JAX): gather the sequence's pages
       into a contiguous (B, L, KVH, hd) view and run ``decode_attention``.
@@ -776,14 +800,20 @@ def paged_decode_attention(
       context per step — fine off-TPU, wasteful on it.
     * **Pallas kernel** (``kernels/flash_attention.paged_decode_attention``):
       K/V tiles are fetched page-by-page via scalar-prefetch indirection
-      with int8 dequant-on-load; only owned pages cross HBM.
+      with int8 dequant-on-load; only owned pages cross HBM, and each page
+      crosses ONCE per step no matter how many verify positions T the step
+      carries (single-pass multi-query — one ``pallas_call`` for all T).
 
     ``use_kernel=None`` picks the kernel on the TPU backend and the gather
     reference elsewhere (interpret-mode Pallas would be far slower than the
-    gather for CPU serving ticks); pass True/False to force either.
+    gather for CPU serving ticks); pass True/False to force either, or set
+    the process-wide ``force_attention_kernel`` override.
     """
     if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
+        use_kernel = (
+            _FORCE_KERNEL if _FORCE_KERNEL is not None
+            else jax.default_backend() == "tpu"
+        )
     if use_kernel:
         from repro.kernels import ops  # deferred: models stay importable solo
 
@@ -801,6 +831,34 @@ def paged_decode_attention(
     return decode_attention(
         q, kc, vc, pos, window=window, softcap=softcap, k_scale=ksc, v_scale=vsc
     )
+
+
+def cross_decode_attention(
+    q: jax.Array,  # (B, T, H, hd) decode-step queries
+    xk: jax.Array,  # (B, Sf, KVH, hd) static encoder K
+    xv: jax.Array,
+    *,
+    softcap: float = 0.0,
+    use_kernel: Optional[bool] = None,
+) -> jax.Array:
+    """Decode-time enc-dec cross-attention: T queries against the static
+    encoder KV pool.  The kernel path (``kernels/ops.cross_decode_attention``)
+    reuses the single-pass multi-query paged kernel with an identity page
+    table, so the encoder cache streams once per step regardless of T; the
+    reference path is plain non-causal attention.  Dispatch mirrors
+    ``paged_decode_attention`` (kernel on TPU, reference elsewhere, same
+    process-wide override).
+    """
+    if use_kernel is None:
+        use_kernel = (
+            _FORCE_KERNEL if _FORCE_KERNEL is not None
+            else jax.default_backend() == "tpu"
+        )
+    if use_kernel:
+        from repro.kernels import ops  # deferred: models stay importable solo
+
+        return ops.cross_decode_attention(q, xk, xv, softcap=softcap)
+    return attention(q, xk, xv, causal=False, softcap=softcap)
 
 
 # ---------------------------------------------------------------------------

@@ -883,6 +883,7 @@ class ServingEngine:
         arr = np.asarray(logits, np.float32)  # (B, k+1, V)
         # -- commit the accepted prefix (+ the guaranteed bonus token) --------
         committed_total = 0
+        tick_accepted = 0
         for slot in live:
             req = self.slot_req[slot]
             remaining = int(self.slot_remaining[slot])
@@ -895,6 +896,7 @@ class ServingEngine:
             # remaining can clip the bonus, in which case ALL c committed
             # tokens are accepted drafts (min handles both cases)
             self.stats.draft_accepted += min(a, c)
+            tick_accepted += min(a, c)
             req.output.extend(toks)
             self.slot_last_tok[slot] = toks[-1]
             self.slot_pos[slot] += c
@@ -904,6 +906,14 @@ class ServingEngine:
         self.stats.decode_steps += 1
         self.stats.decode_tokens += committed_total
         self.stats.verified_positions += len(live) * (k + 1)
+        # feed measured acceptance back into the sizer (EMA): its
+        # committed_per_tick / throughput picks track observed traffic
+        # instead of the configured spec_accept prior
+        if self.sizer is not None and getattr(self.sizer, "spec_k", 0) > 0:
+            proposed = len(live) * k
+            if proposed > 0:
+                tick_rate = min(1.0, tick_accepted / proposed)
+                self.sizer = self.sizer.observe_accept(tick_rate)
         return len(live)
 
     def run_until_done(self, max_ticks: int = 10000) -> EngineStats:

@@ -42,13 +42,25 @@ class TestSpecPerfModel:
             pm.expected_committed(1.5, 2)
 
     def test_spec_nopt_divides_by_verified_positions(self):
-        """One verify step streams weights once for B*(k+1) rows, so the
-        machine-balance *sequence* batch is the plain n_opt / (k+1)."""
+        """One verify step streams weights once for B*(k+1) rows.  With the
+        per-position kv re-fetch (single_pass_kv=False) BOTH terms scale
+        with (k+1) and the sequence batch is exactly n_opt / (k+1); the
+        shipped single-pass kernel charges the page stream once per tick,
+        so the kv tilt doesn't grow with k and the balance batch sits
+        slightly below the old point (the compute term alone carries the
+        (k+1) factor)."""
         kw = dict(b_weight=1.0, n_params=10**9,
                   kv_bytes_per_token=1000.0, context_len=128)
         base = pm.decode_n_opt(**kw)
         assert pm.spec_decode_n_opt(0, **kw) == pytest.approx(base)
-        assert pm.spec_decode_n_opt(3, **kw) == pytest.approx(base / 4)
+        assert pm.spec_decode_n_opt(
+            3, single_pass_kv=False, **kw) == pytest.approx(base / 4)
+        # single-pass: equal to decode_n_opt at kv/(k+1), divided by (k+1)
+        kw_amort = dict(kw, kv_bytes_per_token=1000.0 / 4)
+        assert pm.spec_decode_n_opt(3, **kw) == pytest.approx(
+            pm.decode_n_opt(**kw_amort) / 4)
+        # the kv tilt shrinks: single-pass balance < re-fetch balance
+        assert pm.spec_decode_n_opt(3, **kw) < base / 4
 
     def test_spec_nopt_inf_passthrough(self):
         # memory-bound-at-any-batch stays memory-bound under speculation
@@ -59,8 +71,15 @@ class TestSpecPerfModel:
     def test_spec_step_time_charges_verified_positions(self):
         s = pm.spec_step_time(10**9, 8, 3, 0.5, kv_bytes_per_token=500.0,
                               context_len=64)
-        plain = pm.decode_step_time(10**9, 8 * 4, 500.0, 64)
+        # compute charged at B*(k+1) positions, kv charged ONCE per tick
+        # (single-pass kernel): kv_read = 8*4 * 64 * 500/4 = 8 * 64 * 500
+        plain = pm.decode_step_time(10**9, 8 * 4, 500.0 / 4, 64)
         assert s["t_proc"] == pytest.approx(plain["t_proc"])
+        # the re-fetch datapath charges kv per verified position
+        s_old = pm.spec_step_time(10**9, 8, 3, 0.5, kv_bytes_per_token=500.0,
+                                  context_len=64, single_pass_kv=False)
+        plain_old = pm.decode_step_time(10**9, 8 * 4, 500.0, 64)
+        assert s_old["t_proc"] == pytest.approx(plain_old["t_proc"])
         assert s["committed_per_tick"] == pytest.approx(
             8 * pm.expected_committed(0.5, 3))
         # draft cost is additive on the tick
@@ -91,7 +110,9 @@ class TestSupportsSpecDecode:
 
     def test_stateful_and_nonstandard_families_excluded(self):
         # recurrent / xLSTM states integrate sequentially (no rollback);
-        # VLM / enc-dec decoders don't thread multi-position decode.
+        # VLM / enc-dec stay excluded at the engine level (draft prefill
+        # carries tokens only, caches don't size for the verify overhang)
+        # even though the enc-dec decoder now threads multi-position decode.
         for arch in ("recurrentgemma-2b", "xlstm-350m", "whisper-tiny",
                      "internvl2-2b"):
             assert not supports_spec_decode(C.get_config(arch, smoke=True)), arch
