@@ -31,6 +31,7 @@ import traceback
 from benchmarks import (
     common,
     decode_microbench,
+    degraded_serving,
     fig7_latency,
     kernel_bench,
     nopt_validation,
@@ -56,6 +57,7 @@ ALL = {
     "paged_serving": paged_serving.main,
     "sharded_serving": sharded_serving.main,
     "speculative_serving": speculative_serving.main,
+    "degraded_serving": degraded_serving.main,
     "decode": decode_microbench.main,
 }
 

@@ -270,6 +270,32 @@ class BatchSizer:
             )["t_proc"]
         return t
 
+    def spec_payoff(self, batch: int) -> float:
+        """Modeled committed-tokens/s of a speculative tick at this batch,
+        relative to the same sizer serving plain decode (spec_k == 0).
+        > 1 means speculation wins at the current ``spec_accept``; the
+        ratio collapses below 1 when acceptance drops far enough that the
+        verified-but-rejected positions plus the k+1 draft steps cost more
+        than the committed tokens they buy."""
+        if self.spec_k <= 0:
+            return 1.0
+        plain = dataclasses.replace(
+            self, spec_k=0, spec_accept=0.0, draft_n_params=0)
+        spec_rate = self.committed_per_tick(batch) / self.step_time(batch)
+        plain_rate = batch / plain.step_time(batch)
+        return spec_rate / plain_rate
+
+    def spec_worthwhile(self, batch: int, min_accept: float = 0.0) -> bool:
+        """Whether speculation should stay on at this batch: the observed
+        acceptance EMA clears ``min_accept`` AND the modeled payoff still
+        beats plain decode.  The serving engine's acceptance-collapse
+        fallback (``spec_fallback_accept``) polls this after each
+        speculative tick."""
+        if self.spec_k <= 0:
+            return False
+        return (self.spec_accept >= min_accept
+                and self.spec_payoff(batch) >= 1.0)
+
     def pick(self, waiting: int, context_len: int | None = None,
              kv_bytes_per_token: float | None = None) -> int:
         """Batch size for the next decode step: min(waiting, n_opt), further

@@ -32,6 +32,13 @@ class HeartbeatMonitor:
     def beat(self, host: int):
         self.last_seen[host] = self.clock()
 
+    def silence_s(self, host: int = 0) -> float:
+        """Seconds since ``host`` last beat.  The serving engine runs a
+        single-host monitor as its tick watchdog (host 0 beats once per
+        executed tick); callers read the silence to distinguish a stalled
+        engine from a merely idle one."""
+        return self.clock() - self.last_seen[host]
+
     def dead_hosts(self) -> List[int]:
         now = self.clock()
         return [h for h, t in self.last_seen.items() if now - t > self.timeout_s]

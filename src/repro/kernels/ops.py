@@ -242,6 +242,13 @@ def paged_decode_attention(
     """
     if interpret is None:
         interpret = not _on_tpu()
+    # Guardrail: the table indexes physical pages via scalar prefetch, and
+    # an out-of-range id (corrupted host table, torn update) would read —
+    # and worse, let the paired scatter WRITE — arbitrary pool memory.
+    # Clamping is free next to the page stream and turns that failure into
+    # a wrong-but-bounded attention output the engine's numeric guard and
+    # page audit can catch.
+    page_table = jnp.clip(page_table, 0, k_pages.shape[0] - 1)
     return _fa.paged_decode_attention(
         q, k_pages, v_pages, page_table, pos,
         causal=True, window=window, softcap=softcap,

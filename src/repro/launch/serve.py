@@ -118,6 +118,23 @@ def main(argv=None):
     ap.add_argument("--spec-k", type=int, default=0, metavar="K",
                     help="draft tokens proposed+verified per tick (0 = "
                          "plain decode; needs --draft-config)")
+    ap.add_argument("--request-timeout", type=float, default=0.0, metavar="S",
+                    help="total-latency deadline per request in seconds; a "
+                         "request exceeding it is TIMED_OUT and its slot/"
+                         "pages free immediately (0 = no deadline)")
+    ap.add_argument("--ttft-deadline", type=float, default=0.0, metavar="S",
+                    help="queue-to-first-token deadline in seconds (0 = no "
+                         "deadline)")
+    ap.add_argument("--max-retries", type=int, default=1, metavar="N",
+                    help="bounded retries per request on transient faults "
+                         "(non-finite logits, page-pool pressure); resumes "
+                         "from the committed prefix with backoff")
+    ap.add_argument("--evict-policy", default="fifo",
+                    choices=("fifo", "priority"),
+                    help="admission under pressure: 'fifo' queues (back-"
+                         "pressure), 'priority' preempts the lowest-priority "
+                         "slot (snapshot + requeue, prefill-from-prefix "
+                         "readmission)")
     args = ap.parse_args(argv)
 
     cfg = C.get_config(args.arch, smoke=args.smoke)
@@ -211,7 +228,11 @@ def main(argv=None):
                            expected_context=ctx if paged else None,
                            mesh=mesh, rules=rules,
                            draft_cfg=draft_cfg, draft_params=draft_params,
-                           spec_k=spec_k)
+                           spec_k=spec_k,
+                           request_timeout_s=args.request_timeout or None,
+                           ttft_deadline_s=args.ttft_deadline or None,
+                           max_retries=args.max_retries,
+                           evict_policy=args.evict_policy)
     if engine.paged:
         print(f"[serve] paged KV cache: {engine.num_pages} pages x "
               f"{engine.page_size} tok (pool "
@@ -263,6 +284,15 @@ def main(argv=None):
               f"committed/verified), draft accept rate "
               f"{stats.accept_rate:.2f}, "
               f"{stats.mean_batch:.2f} committed tokens/tick")
+    # failure-model outcomes: anything nonzero means the engine served
+    # through faults or pressure rather than at steady state
+    if (stats.failed or stats.evicted or stats.timed_out or stats.retried
+            or stats.fallback_ticks or engine.degraded):
+        print(f"[serve] failure model: {stats.failed} failed, "
+              f"{stats.timed_out} timed out, {stats.evicted} evictions, "
+              f"{stats.retried} retries, {stats.fallback_ticks} degraded "
+              f"ticks" + (f"; degraded: {engine.degraded}"
+                          if engine.degraded else ""))
 
 
 if __name__ == "__main__":

@@ -756,6 +756,16 @@ def gather_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
     return g.reshape((B, P * ps) + g.shape[3:])
 
 
+def finite_rows(logits: jax.Array) -> jax.Array:
+    """(B,) bool: whether every logit in batch row b is finite — the
+    serving engine's numeric guardrail, folded into the ONE compiled
+    decode step so quarantining a NaN-poisoned slot costs a (B,) bool
+    fetch per tick instead of a host pass over the (B, T, V) logits.
+    Reduces over all non-batch axes, so the same reduction guards T=1
+    decode and T=k+1 speculative verify."""
+    return jnp.isfinite(logits).all(axis=tuple(range(1, logits.ndim)))
+
+
 # Process-wide override for the kernel-vs-gather dispatch below.  Tests use
 # it to force the (interpret-mode) Pallas datapath through whole engine runs
 # off-TPU, where per-call plumbing can't reach (decode steps are jit'd

@@ -91,13 +91,31 @@ admission (eager COW: the new sequence is about to write into it), so a
 donor never sees its writable tail page shared and decode-time COW is a
 defended-against invariant rather than a steady-state cost.  Admission
 under pool exhaustion queues (back-pressure) instead of crashing.
+
+Failure model (``request_timeout_s`` / ``evict_policy`` / ...)
+---------------------------------------------------------------
+One misbehaving request in a shared batch threatens every neighbor's
+throughput — the blast-radius concern of any shared-state engine.  The
+engine therefore runs an explicit per-request state machine
+(``RequestState``: QUEUED → PREFILLING → DECODING → {FINISHED, FAILED,
+EVICTED, TIMED_OUT}) with TTFT and total-latency deadlines enforced every
+tick, bounded retry-with-backoff on transient faults, priority-based
+preemption-safe eviction (snapshot committed tokens, free pages
+refcount-correctly, re-admit by prefill-from-prefix), a device-side
+``isfinite`` guard folded into the compiled decode step that quarantines a
+NaN-poisoned slot instead of letting it poison the batch, and a
+degradation ladder (speculative → plain decode; Pallas paged kernel →
+pure-JAX reference attention).  ``serving/faultinject.py`` drives every
+rung deterministically.  See docs/architecture.md § "Failure model".
 """
 
 from __future__ import annotations
 
 import dataclasses
+import enum
 import functools
 import math
+import time
 from collections import deque
 from typing import Callable, List, Optional
 
@@ -107,6 +125,7 @@ import numpy as np
 
 from repro.core.batching import BatchSizer
 from repro.distributed import shardlib as sl
+from repro.distributed.fault import HeartbeatMonitor
 from repro.models.api import (
     get_api,
     kv_bytes_per_token,
@@ -114,9 +133,11 @@ from repro.models.api import (
     supports_paged_kv,
     supports_spec_decode,
 )
+from repro.models.layers import finite_rows
 from repro.serving.paged import (
     NULL_PAGE,
     PageAllocator,
+    PageAuditError,
     PoolExhausted,
     PrefixRegistry,
 )
@@ -130,6 +151,48 @@ _PAGED_KEYS = (
 )
 
 
+class RequestState(enum.Enum):
+    """Request lifecycle states.  QUEUED → PREFILLING → DECODING is the
+    happy path; FINISHED / FAILED / TIMED_OUT are terminal; EVICTED is the
+    snapshot-and-requeue detour (the request re-enters PREFILLING via
+    prefill-from-prefix, its committed tokens replayed as prompt)."""
+
+    QUEUED = "QUEUED"
+    PREFILLING = "PREFILLING"
+    DECODING = "DECODING"
+    FINISHED = "FINISHED"
+    FAILED = "FAILED"
+    EVICTED = "EVICTED"
+    TIMED_OUT = "TIMED_OUT"
+
+
+TERMINAL_STATES = frozenset(
+    {RequestState.FINISHED, RequestState.FAILED, RequestState.TIMED_OUT})
+
+# legal transitions — anything else is an engine bug and raises loudly
+# (a silently-wrong lifecycle is exactly the failure mode this machine
+# exists to prevent).  QUEUED re-entry from PREFILLING/DECODING is the
+# bounded-retry path; EVICTED re-enters PREFILLING at readmission.
+_TRANSITIONS = {
+    RequestState.QUEUED: {RequestState.PREFILLING, RequestState.TIMED_OUT,
+                          RequestState.FAILED},
+    RequestState.PREFILLING: {RequestState.DECODING, RequestState.QUEUED,
+                              RequestState.FAILED, RequestState.TIMED_OUT},
+    RequestState.DECODING: {RequestState.FINISHED, RequestState.FAILED,
+                            RequestState.EVICTED, RequestState.TIMED_OUT,
+                            RequestState.QUEUED},
+    RequestState.EVICTED: {RequestState.PREFILLING, RequestState.QUEUED,
+                           RequestState.TIMED_OUT, RequestState.FAILED},
+    RequestState.FINISHED: frozenset(),
+    RequestState.FAILED: frozenset(),
+    RequestState.TIMED_OUT: frozenset(),
+}
+
+
+class InvalidTransition(RuntimeError):
+    """An engine bug drove a request through an illegal lifecycle edge."""
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -137,9 +200,40 @@ class Request:
     max_new_tokens: int
     temperature: float = 0.0
     extras: Optional[dict] = None  # patches / frames for VLM / audio
+    # failure-model knobs (per request; engine-level defaults apply when
+    # None): priority orders preemption under evict_policy="priority",
+    # deadlines are budgets relative to submit time on the engine clock.
+    priority: int = 0
+    ttft_deadline_s: Optional[float] = None  # queue-to-first-token budget
+    deadline_s: Optional[float] = None  # total-latency budget
     # filled by the engine:
     output: Optional[List[int]] = None
     done: bool = False
+    state: RequestState = RequestState.QUEUED
+    error: Optional[str] = None
+    retries: int = 0  # transient-failure retries consumed
+    evictions: int = 0  # preemptions survived (do not consume retries)
+    submit_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    not_before: float = 0.0  # retry backoff gate (engine-clock time)
+    history: List[RequestState] = dataclasses.field(
+        default_factory=lambda: [RequestState.QUEUED])
+
+    @property
+    def terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+    def transition(self, new: RequestState, *, error: Optional[str] = None):
+        if new not in _TRANSITIONS[self.state]:
+            raise InvalidTransition(
+                f"request {self.uid}: {self.state.value} -> {new.value}")
+        self.state = new
+        self.history.append(new)
+        if error is not None:
+            self.error = error
+        if new in TERMINAL_STATES:
+            self.done = True
 
 
 @dataclasses.dataclass
@@ -159,6 +253,16 @@ class EngineStats:
     verified_positions: int = 0  # target positions run per verify step
     draft_proposed: int = 0  # draft tokens offered to verification
     draft_accepted: int = 0  # draft tokens committed by verification
+    # failure model: terminal outcomes besides completion, plus recovery
+    # traffic.  None of these feed mean_batch/accept_rate — decode_steps
+    # only counts executed decode steps and draft_proposed only counts
+    # drafts whose verification was numerically sound, so throughput and
+    # acceptance stay comparable with the fault-free plain engine.
+    failed: int = 0  # terminal FAILED (retries exhausted / cancelled)
+    evicted: int = 0  # preemptions (snapshot + requeue, not terminal)
+    timed_out: int = 0  # TTFT or total-latency deadline exceeded
+    retried: int = 0  # transient-failure requeues (bounded by max_retries)
+    fallback_ticks: int = 0  # ticks served in any degraded mode
 
     @property
     def mean_batch(self) -> float:
@@ -206,6 +310,19 @@ class ServingEngine:
         draft_params=None,
         spec_k: int = 0,  # draft tokens per tick (0 = plain decode)
         seed: int = 0,
+        # -- failure model ------------------------------------------------
+        request_timeout_s: Optional[float] = None,  # default total deadline
+        ttft_deadline_s: Optional[float] = None,  # default TTFT deadline
+        max_retries: int = 1,  # transient-failure retries per request
+        retry_backoff_s: float = 0.0,  # backoff base (doubles per retry)
+        evict_policy: str = "fifo",  # "fifo" back-pressure | "priority" preempt
+        deadline_slack_s: float = 0.0,  # TTFT pressure window for preemption
+        clock: Callable[[], float] = time.monotonic,
+        watchdog_timeout_s: Optional[float] = None,  # HeartbeatMonitor stall
+        fault_injector=None,  # serving/faultinject.FaultInjector (or None)
+        spec_fallback_accept: Optional[float] = None,  # EMA floor; None = off
+        spec_fallback_min_ticks: int = 8,  # spec ticks before the EMA check
+        audit_every_step: bool = False,  # PageAllocator.audit() each tick
     ):
         self.cfg = cfg
         self.mesh = mesh
@@ -289,27 +406,31 @@ class ServingEngine:
             (self.data_parallel, self.model_parallel,
              self.kv_parallel) = sl.parallelism_degrees(
                 mesh, self.rules, int(getattr(cfg, "n_kv_heads", 0) or 0))
+        # the sizer is built even when the caller fixes max_batch: beyond
+        # picking n_opt it is the engine's live throughput model — the
+        # speculative acceptance EMA (observe_accept) and the acceptance-
+        # collapse fallback (spec_worthwhile) both read it every tick.
+        if sizer is None:
+            mp_kw = dict(model_parallel=self.model_parallel,
+                         kv_parallel=self.kv_parallel,
+                         spec_k=self.spec_k)
+            if self.spec_k:
+                mp_kw["draft_n_params"] = get_api(
+                    draft_cfg).n_params_exact(draft_cfg)
+            if plan is not None:
+                # pruning + quantization shrink t_mem: the plan knows the
+                # achieved (b_weight, q_prune, q_overhead), so n_opt
+                # lands where Section 5.6 predicts for this model.
+                sizer = plan.sizer(
+                    n_params=self.api.n_params_exact(cfg),
+                    kv_bytes_per_token=kv_tok, context_len=ctx, **mp_kw,
+                )
+            else:
+                sizer = BatchSizer(
+                    n_params=self.api.n_params_exact(cfg),
+                    kv_bytes_per_token=kv_tok, context_len=ctx, **mp_kw,
+                )
         if max_batch is None:
-            if sizer is None:
-                mp_kw = dict(model_parallel=self.model_parallel,
-                             kv_parallel=self.kv_parallel,
-                             spec_k=self.spec_k)
-                if self.spec_k:
-                    mp_kw["draft_n_params"] = get_api(
-                        draft_cfg).n_params_exact(draft_cfg)
-                if plan is not None:
-                    # pruning + quantization shrink t_mem: the plan knows the
-                    # achieved (b_weight, q_prune, q_overhead), so n_opt
-                    # lands where Section 5.6 predicts for this model.
-                    sizer = plan.sizer(
-                        n_params=self.api.n_params_exact(cfg),
-                        kv_bytes_per_token=kv_tok, context_len=ctx, **mp_kw,
-                    )
-                else:
-                    sizer = BatchSizer(
-                        n_params=self.api.n_params_exact(cfg),
-                        kv_bytes_per_token=kv_tok, context_len=ctx, **mp_kw,
-                    )
             # the sizer's n_opt is the balance point of ONE model group
             # (data parallelism replicates the whole analysis, see
             # decode_n_opt): the engine's global batch must feed every data
@@ -324,8 +445,35 @@ class ServingEngine:
         self.slot_pos = np.zeros((max_batch,), np.int32)  # next position to write
         self.slot_remaining = np.zeros((max_batch,), np.int32)
         self.slot_last_tok = np.zeros((max_batch,), np.int32)
+        self.slot_admit_seq = np.zeros((max_batch,), np.int64)  # admission order
         self.queue: deque = deque()
         self.stats = EngineStats()
+        # -- failure model -------------------------------------------------
+        if evict_policy not in ("fifo", "priority"):
+            raise ValueError(f"evict_policy must be fifo|priority, got {evict_policy!r}")
+        self.request_timeout_s = request_timeout_s
+        self.ttft_deadline_s = ttft_deadline_s
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.evict_policy = evict_policy
+        self.deadline_slack_s = float(deadline_slack_s)
+        self.clock = clock
+        self.fault_injector = fault_injector
+        self.spec_fallback_accept = spec_fallback_accept
+        self.spec_fallback_min_ticks = int(spec_fallback_min_ticks)
+        self.audit_every_step = bool(audit_every_step)
+        self.tick = 0  # 1-based after the first step()
+        self._admit_seq = 0
+        self._spec_ticks = 0
+        # degradation ladder: rung name -> reason.  A populated dict means
+        # the engine is serving in a degraded mode (counted per tick in
+        # stats.fallback_ticks); rungs are one-way within an engine's life.
+        self.degraded: dict = {}
+        self.spec_active = self.spec_k > 0
+        self.watchdog = (
+            HeartbeatMonitor(n_hosts=1, timeout_s=watchdog_timeout_s,
+                             clock=clock)
+            if watchdog_timeout_s is not None else None)
         self._rng = jax.random.key(seed)
         # host-side RNG for the speculative draft/accept chain (per-slot
         # temperatures; the jax stream above stays the non-spec sampler)
@@ -355,12 +503,7 @@ class ServingEngine:
                 cfg, max_batch, max_len, self.dtype, kv_dtype=self.kv_dtype,
                 **self._spec_cache_kw(),
             )
-        if mesh is None:
-            self._decode = jax.jit(
-                functools.partial(self.api.decode_step, cfg), donate_argnums=(1,)
-            )
-            self._prefill1 = jax.jit(functools.partial(self._prefill_one_impl, cfg))
-        else:
+        if mesh is not None:
             # sharded serving: params and caches are placed ONCE by the
             # axis-rules registry (dense, PackedLinear, int8 scales, page
             # pools — no leaf kind falls back to ad-hoc annotations), and
@@ -368,17 +511,6 @@ class ServingEngine:
             # shard_pinned constraints resolve against the same rules.
             self.params = jax.device_put(self.params, self._param_shardings())
             self.cache = jax.device_put(self.cache, self._cache_shardings())
-
-            def _decode_meshed(params, cache, tokens, pos):
-                with sl.use_mesh(self.mesh, self.rules):
-                    return self.api.decode_step(self.cfg, params, cache, tokens, pos)
-
-            def _prefill_meshed(params, batch, cache1):
-                with sl.use_mesh(self.mesh, self.rules):
-                    return self.api.prefill(self.cfg, params, batch, cache1)
-
-            self._decode = jax.jit(_decode_meshed, donate_argnums=(1,))
-            self._prefill1 = jax.jit(_prefill_meshed)
         # draft side of speculative decode: its own (dense, contiguous-
         # cache) prefill + single-token decode steps.  The verify step
         # needs no extra compile plumbing — self._decode re-specializes on
@@ -394,14 +526,7 @@ class ServingEngine:
                 draft_cfg, max_batch, max_len, self.draft_dtype,
                 spec_k=self.spec_k,
             )
-            if mesh is None:
-                self._draft_decode = jax.jit(
-                    functools.partial(self.draft_api.decode_step, draft_cfg),
-                    donate_argnums=(1,),
-                )
-                self._draft_prefill1 = jax.jit(
-                    functools.partial(self._prefill_one_impl, draft_cfg))
-            else:
+            if mesh is not None:
                 # draft params/cache placed once through the same registry;
                 # both draft steps trace under use_mesh like the target's.
                 self.draft_params = jax.device_put(
@@ -416,20 +541,65 @@ class ServingEngine:
                         self.draft_cache,
                         self.draft_api.cache_axes(draft_cfg),
                         mesh=self.mesh, rules=self.rules))
+        self._build_steps()
 
-                def _draft_decode_meshed(params, cache, tokens, pos):
-                    with sl.use_mesh(self.mesh, self.rules):
-                        return self.draft_api.decode_step(
-                            self.draft_cfg, params, cache, tokens, pos)
+    def _build_steps(self):
+        """(Re)create the jitted step wrappers.  Called once at init and
+        again by the degradation ladder — a fresh ``jax.jit`` cache is what
+        makes the flipped ``layers.force_attention_kernel`` override take
+        effect (the old traces baked in the old dispatch).
 
-                def _draft_prefill_meshed(params, batch, cache1):
-                    with sl.use_mesh(self.mesh, self.rules):
-                        return self.draft_api.prefill(
-                            self.draft_cfg, params, batch, cache1)
+        The decode wrapper folds the numeric guardrail into the ONE
+        compiled step: the per-slot ``poison`` mask (the ``nan_logits``
+        injection point — normally all-False) lands before a per-slot
+        ``layers.finite_rows`` reduction, so the engine's quarantine
+        decision costs one (B,) bool fetch per tick instead of a second
+        host pass over (B, T, V) logits."""
+        cfg, api = self.cfg, self.api
 
-                self._draft_decode = jax.jit(
-                    _draft_decode_meshed, donate_argnums=(1,))
-                self._draft_prefill1 = jax.jit(_draft_prefill_meshed)
+        def _decode_impl(params, cache, tokens, pos, poison):
+            logits, cache = api.decode_step(cfg, params, cache, tokens, pos)
+            logits = jnp.where(poison[:, None, None], jnp.nan, logits)
+            return logits, finite_rows(logits), cache
+
+        if self.mesh is None:
+            self._decode = jax.jit(_decode_impl, donate_argnums=(1,))
+            self._prefill1 = jax.jit(functools.partial(self._prefill_one_impl, cfg))
+        else:
+            def _decode_meshed(params, cache, tokens, pos, poison):
+                with sl.use_mesh(self.mesh, self.rules):
+                    return _decode_impl(params, cache, tokens, pos, poison)
+
+            def _prefill_meshed(params, batch, cache1):
+                with sl.use_mesh(self.mesh, self.rules):
+                    return self.api.prefill(self.cfg, params, batch, cache1)
+
+            self._decode = jax.jit(_decode_meshed, donate_argnums=(1,))
+            self._prefill1 = jax.jit(_prefill_meshed)
+        if not self.spec_k:
+            return
+        draft_cfg = self.draft_cfg
+        if self.mesh is None:
+            self._draft_decode = jax.jit(
+                functools.partial(self.draft_api.decode_step, draft_cfg),
+                donate_argnums=(1,),
+            )
+            self._draft_prefill1 = jax.jit(
+                functools.partial(self._prefill_one_impl, draft_cfg))
+        else:
+            def _draft_decode_meshed(params, cache, tokens, pos):
+                with sl.use_mesh(self.mesh, self.rules):
+                    return self.draft_api.decode_step(
+                        self.draft_cfg, params, cache, tokens, pos)
+
+            def _draft_prefill_meshed(params, batch, cache1):
+                with sl.use_mesh(self.mesh, self.rules):
+                    return self.draft_api.prefill(
+                        self.draft_cfg, params, batch, cache1)
+
+            self._draft_decode = jax.jit(
+                _draft_decode_meshed, donate_argnums=(1,))
+            self._draft_prefill1 = jax.jit(_draft_prefill_meshed)
 
     def _spec_cache_kw(self) -> dict:
         """Extra init_cache kwargs for speculative mode: widened local
@@ -470,8 +640,33 @@ class ServingEngine:
     # -- host-side plumbing -------------------------------------------------
 
     def submit(self, req: Request):
+        if req.submit_t is not None or req.state is not RequestState.QUEUED:
+            raise ValueError(
+                f"request {req.uid} already submitted (state {req.state.value})")
         req.output = []
+        req.submit_t = self.clock()
         self.queue.append(req)
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel a queued or running request: slot and pages free
+        immediately, the request terminates FAILED("cancelled").  Terminal
+        requests are a no-op (returns False)."""
+        if req.terminal:
+            return False
+        if req in self.queue:
+            self.queue.remove(req)
+            req.transition(RequestState.FAILED, error="cancelled")
+            req.finish_t = self.clock()
+            self.stats.failed += 1
+            return True
+        for slot, r in enumerate(self.slot_req):
+            if r is req:
+                self._release_slot(slot)
+                req.transition(RequestState.FAILED, error="cancelled")
+                req.finish_t = self.clock()
+                self.stats.failed += 1
+                return True
+        return False
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -483,6 +678,145 @@ class ServingEngine:
     def pages_in_use(self) -> int:
         return self.allocator.used_pages if self.paged else 0
 
+    # -- failure model: deadlines, retries, eviction --------------------------
+
+    def _release_slot(self, slot: int):
+        """Free a slot's host state and its pages (refcount-correct through
+        shared prefixes).  The device cache rows need no scrub: position
+        masks keep stale entries invisible to later occupants, and the
+        paged table row reverts to the null page."""
+        self.slot_req[slot] = None
+        if self.paged:
+            self._free_slot_pages(slot)
+
+    def _deadline_reason(self, req: Request, now: float) -> Optional[str]:
+        """Which deadline (if any) ``req`` has exceeded at ``now``.
+        Per-request budgets override the engine defaults; the TTFT budget
+        only applies until the first token exists."""
+        if req.submit_t is None:
+            return None
+        total = (req.deadline_s if req.deadline_s is not None
+                 else self.request_timeout_s)
+        if total is not None and now - req.submit_t > total:
+            return f"total-latency deadline {total:g}s exceeded"
+        if req.first_token_t is None:
+            ttft = (req.ttft_deadline_s if req.ttft_deadline_s is not None
+                    else self.ttft_deadline_s)
+            if ttft is not None and now - req.submit_t > ttft:
+                return f"TTFT deadline {ttft:g}s exceeded"
+        return None
+
+    def _time_out(self, req: Request, reason: str, slot: Optional[int] = None):
+        if slot is not None:
+            self._release_slot(slot)
+        req.transition(RequestState.TIMED_OUT, error=reason)
+        req.finish_t = self.clock()
+        self.stats.timed_out += 1
+
+    def _enforce_deadlines(self, now: float):
+        """Deadline sweep, run at the top of every tick: queued requests
+        (including evicted ones awaiting readmission) and live slots both
+        time out the moment their budget lapses — an expired request never
+        occupies a slot or pages past the tick that caught it."""
+        for req in [r for r in self.queue if self._deadline_reason(r, now)]:
+            self.queue.remove(req)
+            self._time_out(req, self._deadline_reason(req, now))
+        for slot in self._live_slots():
+            reason = self._deadline_reason(self.slot_req[slot], now)
+            if reason is not None:
+                self._time_out(self.slot_req[slot], reason, slot=slot)
+
+    def _retry_or_fail(self, req: Request, reason: str):
+        """Transient-failure policy: bounded retry with exponential backoff
+        (``not_before`` gates readmission), resuming from the committed
+        prefix exactly like eviction; FAILED once ``max_retries`` is
+        spent.  Either way the request keeps moving toward a terminal
+        state — nothing retries forever."""
+        now = self.clock()
+        if req.retries >= self.max_retries:
+            req.transition(RequestState.FAILED, error=reason)
+            req.finish_t = now
+            self.stats.failed += 1
+            return
+        req.retries += 1
+        self.stats.retried += 1
+        req.not_before = now + self.retry_backoff_s * (2 ** (req.retries - 1))
+        req.transition(RequestState.QUEUED, error=reason)
+        self.queue.append(req)
+
+    def _quarantine_slot(self, slot: int, reason: str):
+        """Numeric guardrail: a slot whose logits went non-finite is cut
+        out of the batch this tick (slot recycled, pages freed) so the
+        poison cannot reach neighbors via shared engine state, then
+        retried from its committed prefix or failed."""
+        req = self.slot_req[slot]
+        self._release_slot(slot)
+        self._retry_or_fail(req, reason)
+
+    def _evict_slot(self, slot: int, reason: str):
+        """Preemption-safe eviction.  The committed tokens already live in
+        ``req.output`` (that list *is* the snapshot), private pages free
+        refcount-correctly (shared prefix pages just drop one reference —
+        the donor's mapping is untouched), and the request re-enters the
+        queue front for prefill-from-prefix readmission; under
+        ``share_prefix`` its still-live prefix pages are re-mapped instead
+        of recomputed.  Evictions do not consume retries: progress was
+        preserved, and termination stays bounded by the deadlines."""
+        req = self.slot_req[slot]
+        self._release_slot(slot)
+        req.transition(RequestState.EVICTED, error=reason)
+        req.evictions += 1
+        self.stats.evicted += 1
+        self.queue.appendleft(req)
+
+    def _pick_victim(self, incoming: Request, now: float) -> Optional[int]:
+        """Eviction victim under ``evict_policy="priority"``: the lowest-
+        priority live slot, ties broken toward the most recently admitted
+        (least progress lost).  A victim must rank strictly below the
+        incoming request, so same-priority traffic can never thrash
+        (A evicts B evicts A); TTFT deadline pressure — the incoming
+        request would blow its TTFT budget within ``deadline_slack_s`` —
+        is worth one priority level."""
+        if self.evict_policy != "priority":
+            return None
+        live = self._live_slots()
+        if not live:
+            return None
+        slot = min(live, key=lambda s: (
+            self.slot_req[s].priority, -int(self.slot_admit_seq[s])))
+        boost = 0
+        ttft = (incoming.ttft_deadline_s if incoming.ttft_deadline_s is not None
+                else self.ttft_deadline_s)
+        if (self.deadline_slack_s > 0 and ttft is not None
+                and incoming.first_token_t is None
+                and incoming.submit_t is not None
+                and now - incoming.submit_t >= ttft - self.deadline_slack_s):
+            boost = 1
+        if self.slot_req[slot].priority < incoming.priority + boost:
+            return slot
+        return None
+
+    def _next_queued(self, now: float) -> Optional[Request]:
+        """Next admissible queued request: highest priority first under the
+        priority policy (FIFO among equals), pure FIFO otherwise.
+        Retry-backoff-gated requests are invisible until ``not_before``."""
+        eligible = [r for r in self.queue if r.not_before <= now]
+        if not eligible:
+            return None
+        if self.evict_policy == "priority":
+            return max(eligible, key=lambda r: r.priority)
+        return eligible[0]
+
+    def _resume_tokens(self, req: Request) -> np.ndarray:
+        """Prefill token stream: the prompt plus any committed output (the
+        eviction/retry snapshot) — readmission is prefill-from-prefix, so
+        greedy streams continue bit-identically at the committed frontier."""
+        out = req.output or []
+        if not out:
+            return np.asarray(req.prompt, np.int32)
+        return np.concatenate([np.asarray(req.prompt, np.int32),
+                               np.asarray(out, np.int32)])
+
     # -- device-side steps ----------------------------------------------------
 
     @staticmethod
@@ -490,98 +824,163 @@ class ServingEngine:
         api = get_api(cfg)
         return api.prefill(cfg, params, batch, cache1)
 
-    def _prefill_request(self, req: Request):
-        """Run the batch-1 prefill; returns (first sampled token, cache1)."""
+    def _prefill_request(self, req: Request, tokens: np.ndarray):
+        """Run the batch-1 prefill over ``tokens`` — the prompt, plus any
+        committed output when resuming after eviction/retry.  Returns
+        (first sampled token, cache1, logits-finite flag); a non-finite
+        prefill row sends the request to the retry path instead of
+        admitting a poisoned slot."""
         cache1 = self.api.init_cache(
             self.cfg, 1, self.max_len, self.dtype, kv_dtype=self.kv_dtype,
             **self._spec_cache_kw(),
         )
-        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)[None]}
         for k, v in (req.extras or {}).items():
             batch[k] = jnp.asarray(v)[None]
         logits, cache1 = self._prefill1(self.params, batch, cache1)
-        tok = self._sample(logits[:, -1], req.temperature)
-        return int(tok[0]), cache1
+        row = logits[:, -1]
+        ok = bool(jnp.isfinite(row).all())
+        tok = self._sample(row, req.temperature)
+        return int(tok[0]), cache1, ok
 
-    def _draft_prefill_slot(self, slot: int, req: Request):
-        """Fill the draft model's KV for this request's prompt into its
-        slot of the (always contiguous) draft cache.  The draft's prefill
-        logits are discarded — the target's prefill sampled the first
-        token; the draft only needs the prompt KV so its per-tick decode
+    def _draft_prefill_slot(self, slot: int, tokens: np.ndarray):
+        """Fill the draft model's KV for this request's prefill tokens into
+        its slot of the (always contiguous) draft cache.  The draft's
+        prefill logits are discarded — the target's prefill sampled the
+        first token; the draft only needs the KV so its per-tick decode
         chain starts from the committed frontier."""
         cache1 = self.draft_api.init_cache(
             self.draft_cfg, 1, self.max_len, self.draft_dtype,
             spec_k=self.spec_k,
         )
-        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)[None]}
         _, cache1 = self._draft_prefill1(self.draft_params, batch, cache1)
         self.draft_cache = jax.tree.map(
             functools.partial(self._ins_slot, slot), self.draft_cache, cache1)
 
-    def _start_slot(self, slot: int, req: Request, S: int, first_tok: int):
-        if self.spec_k:
-            self._draft_prefill_slot(slot, req)
+    def _start_slot(self, slot: int, req: Request, S: int, first_tok: int,
+                    tokens: np.ndarray, resumed: bool):
+        if self.spec_active:
+            try:
+                self._draft_prefill_slot(slot, tokens)
+            except Exception as e:  # dead draft at admission: rung 1
+                self._degrade_speculation(f"draft prefill failed: {e}")
         self.slot_req[slot] = req
         self.slot_pos[slot] = S
-        self.slot_remaining[slot] = req.max_new_tokens
+        self._admit_seq += 1
+        self.slot_admit_seq[slot] = self._admit_seq
+        # resumption: already-committed tokens were replayed as prompt, so
+        # only the rest of the generation budget remains
+        self.slot_remaining[slot] = req.max_new_tokens - len(req.output)
         self.slot_last_tok[slot] = first_tok
+        req.transition(RequestState.DECODING)
         req.output.append(first_tok)
         self.slot_remaining[slot] -= 1
+        if req.first_token_t is None:
+            req.first_token_t = self.clock()
         self.stats.prefills += 1
-        self.stats.context_tokens += S + req.max_new_tokens
+        if not resumed:
+            # readmissions don't recount context: mean_context stays the
+            # admitted-traffic quantity, comparable with the plain engine
+            self.stats.context_tokens += S + req.max_new_tokens
         self._finish_if_done(slot)
 
     def _admit(self):
-        """Move queued requests into free slots (prefill)."""
+        """Move queued requests into free slots (prefill); under the
+        priority policy a blocked queue may preempt a lower-priority slot."""
         if self.paged:
             return self._admit_paged()
-        for slot in self._free_slots():
-            if not self.queue:
+        now = self.clock()
+        while self.queue:
+            req = self._next_queued(now)
+            if req is None:
                 break
-            req = self.queue.popleft()
-            S = len(req.prompt) + self.api.prefix_len(self.cfg)
+            free = self._free_slots()
+            if not free:
+                victim = self._pick_victim(req, now)
+                if victim is None:
+                    break
+                self._evict_slot(victim, "preempted")
+                continue  # the evictee re-entered the queue: re-select
+            slot = free[0]
+            self.queue.remove(req)
+            resumed = bool(req.output)
+            req.transition(RequestState.PREFILLING)
+            tokens = self._resume_tokens(req)
+            S = len(tokens) + self.api.prefix_len(self.cfg)
             # spec_k headroom: the last verify tick writes up to spec_k
             # positions past the final committed token; the ring must never
             # wrap (a wrapped speculative write would clobber a live early
-            # position that masking cannot recover).
-            assert S + req.max_new_tokens + self.spec_k <= self.max_len, \
+            # position that masking cannot recover).  Invariant under
+            # resumption: S + remaining == len(prompt) + prefix + max_new.
+            remaining = req.max_new_tokens - len(req.output)
+            assert S + remaining + self.spec_k <= self.max_len, \
                 "request (+ spec_k speculation headroom) exceeds max_len"
-            tok, cache1 = self._prefill_request(req)
+            tok, cache1, ok = self._prefill_request(req, tokens)
+            if not ok:
+                self._retry_or_fail(req, "non-finite prefill logits")
+                continue
             self._write_slot(slot, cache1)
-            self._start_slot(slot, req, S, tok)
+            self._start_slot(slot, req, S, tok, tokens, resumed)
 
     def _admit_paged(self):
-        """Paged admission: map shared prefix pages, allocate the rest, queue
-        on exhaustion (FIFO back-pressure, no crash)."""
+        """Paged admission: map shared prefix pages, allocate the rest; on
+        exhaustion either preempt a lower-priority slot (priority policy)
+        or leave the queue alone (FIFO back-pressure, no crash).  Any
+        admission failure after pages were claimed releases them before
+        the request re-queues — a torn admission can never leak."""
         ps = self.page_size
-        for slot in self._free_slots():
-            if not self.queue:
+        now = self.clock()
+        while self.queue:
+            req = self._next_queued(now)
+            if req is None:
                 break
-            req = self.queue[0]
-            S = len(req.prompt) + self.api.prefix_len(self.cfg)
-            total = S + req.max_new_tokens
+            free = self._free_slots()
+            if not free:
+                victim = self._pick_victim(req, now)
+                if victim is None:
+                    break
+                self._evict_slot(victim, "preempted (slot pressure)")
+                continue  # the evictee re-entered the queue: re-select
+            slot = free[0]
+            tokens = self._resume_tokens(req)
+            S = len(tokens) + self.api.prefix_len(self.cfg)
+            remaining = req.max_new_tokens - len(req.output or [])
+            total = S + remaining
             capacity = self.pages_per_seq * ps
             if total + self.spec_k > capacity:
                 # spec_k headroom keeps the verify scatter's page-table
                 # lookups in range; writes past the *allocated* pages land
                 # on NULL_PAGE rows and are absorbed by the null page.
                 raise ValueError(
-                    f"request {req.uid}: S + max_new (+ spec_k) = "
+                    f"request {req.uid}: S + remaining (+ spec_k) = "
                     f"{total + self.spec_k} exceeds the page-table capacity "
                     f"{capacity} (pages_per_seq * page_size); raise max_len")
-            prompt_key = tuple(int(t) for t in req.prompt)
+            prompt_key = tuple(int(t) for t in tokens)
             shared_len, shared_pages = (
                 self.registry.match(prompt_key) if self.registry is not None
                 else (0, []))
             n_total = math.ceil(total / ps)
             n_full = shared_len // ps  # full pages mapped by refcount
             boundary = 1 if shared_len % ps else 0  # partial page: eager COW
-            if not self.allocator.can_alloc(n_total - n_full):
-                break  # pool exhausted: request stays queued
-            self.queue.popleft()
+            if not self._can_alloc_pages(n_total - n_full):
+                victim = self._pick_victim(req, now)
+                if victim is None:
+                    break  # pool exhausted: request stays queued
+                self._evict_slot(victim, "preempted (page-pool pressure)")
+                continue
+            self.queue.remove(req)
+            resumed = bool(req.output)
+            req.transition(RequestState.PREFILLING)
             retained = shared_pages[:n_full]
             self.allocator.retain(retained)
-            fresh = self.allocator.alloc(n_total - n_full)
+            try:
+                fresh = self._alloc_pages(n_total - n_full)
+            except PoolExhausted as e:
+                # raced an (injected) failure between can_alloc and alloc
+                self.allocator.release(retained)
+                self._retry_or_fail(req, f"page pool exhausted at admission: {e}")
+                continue
             if boundary:
                 # the new sequence writes positions [shared_len, ...) into
                 # this page, so it cannot share it read-only: copy-on-write
@@ -593,15 +992,72 @@ class ServingEngine:
             self.slot_pages[slot] = pages
             self._table[slot, :] = NULL_PAGE
             self._table[slot, : len(pages)] = pages
-            tok, cache1 = self._prefill_request(req)
+            try:
+                tok, cache1, ok = self._prefill_request(req, tokens)
+            except Exception:
+                # torn admission: release before propagating, so the
+                # allocator stays audit-clean even on unexpected errors
+                self._free_slot_pages(slot)
+                raise
+            if not ok:
+                self._free_slot_pages(slot)
+                self._retry_or_fail(req, "non-finite prefill logits")
+                continue
             # shared positions [0, shared_len) already hold identical KV
             # (same tokens, same positions, same params): write only ours.
             self._write_slot_paged(slot, cache1, start=shared_len, stop=S)
             if self.registry is not None:
                 self.registry.register(prompt_key, pages[: math.ceil(S / ps)])
-            self._start_slot(slot, req, S, tok)
+            self._start_slot(slot, req, S, tok, tokens, resumed)
 
     # -- paged-pool plumbing --------------------------------------------------
+
+    def _can_alloc_pages(self, n: int) -> bool:
+        """Allocator probe, threaded through the ``alloc_fail`` injection
+        point so transient pool pressure is testable deterministically."""
+        fi = self.fault_injector
+        if fi is not None and fi.alloc_fail(self.tick):
+            return False
+        return self.allocator.can_alloc(n)
+
+    def _alloc_pages(self, n: int) -> List[int]:
+        """Page allocation, threaded through the ``alloc_fail`` injection
+        point.  Callers treat ``PoolExhausted`` as a transient fault — the
+        affected request retries or fails, never the whole batch."""
+        fi = self.fault_injector
+        if fi is not None and fi.alloc_fail(self.tick):
+            raise PoolExhausted(f"injected allocation failure at tick {self.tick}")
+        return self.allocator.alloc(n)
+
+    def audit_pages(self):
+        """Invariant check: allocator refcounts and free list must equal
+        the live slot→page mapping exactly, and the host page table must
+        mirror it.  No-op for contiguous engines.  Raises
+        ``paged.PageAuditError`` on the first divergence — the chaos
+        harness runs it after every tick (and ``audit_every_step=True``
+        folds it into ``step()``), so a leak is caught on the tick that
+        caused it.
+
+        Note the audit is engine-relative: pages retained by an *external*
+        holder (e.g. a caller pinning prefix pages) are outside the slot
+        mapping and would trip it — that is why per-step auditing is
+        opt-in rather than always-on."""
+        if not self.paged:
+            return
+        refs = [p for pages in self.slot_pages for p in pages]
+        self.allocator.audit(refs)
+        for slot in range(self.max_batch):
+            pages = self.slot_pages[slot]
+            row = self._table[slot]
+            if not (np.array_equal(row[: len(pages)],
+                                   np.asarray(pages, np.int32))
+                    and np.all(row[len(pages):] == NULL_PAGE)):
+                raise PageAuditError(
+                    f"slot {slot}: table row {row.tolist()} does not mirror "
+                    f"the slot mapping {pages}")
+            if self.slot_req[slot] is None and pages:
+                raise PageAuditError(
+                    f"slot {slot}: free slot still owns pages {pages}")
 
     def _cache_entries(self):
         """Yield (list, index, entry) over the per-layer cache dicts so pool
@@ -628,7 +1084,10 @@ class ServingEngine:
         refcount > 1 pages read-only no matter how sharing evolves."""
         phys = self.slot_pages[slot][logical_page]
         if self.allocator.refcount[phys] > 1:
-            new = self.allocator.alloc(1)[0]  # PoolExhausted = config error
+            # PoolExhausted propagates to the caller: admission paths
+            # release-and-retry the request; _publish_table quarantines
+            # the slot — the batch itself never crashes on COW pressure.
+            new = self._alloc_pages(1)[0]
             self._copy_page(phys, new)
             self.allocator.release([phys])
             self.slot_pages[slot][logical_page] = new
@@ -697,25 +1156,35 @@ class ServingEngine:
     def _finish_if_done(self, slot: int):
         if self.slot_remaining[slot] <= 0:
             req = self.slot_req[slot]
-            req.done = True
-            self.slot_req[slot] = None
+            self._release_slot(slot)
+            req.transition(RequestState.FINISHED)
+            req.finish_t = self.clock()
             self.stats.completed += 1
-            if self.paged:
-                self._free_slot_pages(slot)
 
-    def _publish_table(self, live: List[int], span: int = 0):
+    def _publish_table(self, live: List[int], span: int = 0) -> List[int]:
         """COW guard on this tick's write targets (positions
         [pos, pos + span], possibly straddling page boundaries), then
         publish the table to the device-side cache pytree (the step reads
-        it; the mapping itself never changes on device)."""
+        it; the mapping itself never changes on device).  Returns the
+        slots that remain live: a slot whose COW copy cannot be allocated
+        (pool pressure, injected failure) is quarantined to the retry path
+        instead of crashing the batch."""
         ps = self.page_size
+        ok_live: List[int] = []
         for slot in live:
             first = int(self.slot_pos[slot]) // ps
             last = (int(self.slot_pos[slot]) + span) // ps
             # pages past the allocated range map to NULL_PAGE (speculative
             # overrun): nothing to privatize there, the null page absorbs
-            for lp in range(first, min(last, len(self.slot_pages[slot]) - 1) + 1):
-                self._ensure_private(slot, lp)
+            try:
+                for lp in range(
+                        first, min(last, len(self.slot_pages[slot]) - 1) + 1):
+                    self._ensure_private(slot, lp)
+            except PoolExhausted as e:
+                self._quarantine_slot(
+                    slot, f"copy-on-write allocation failed: {e}")
+                continue
+            ok_live.append(slot)
         table = jnp.asarray(self._table)
         if self.mesh is not None:
             # the table is host-owned per replica: commit it to its
@@ -725,34 +1194,141 @@ class ServingEngine:
                 self.mesh, table.shape, *sl.axes_for("page_table"),
                 rules=self.rules))
         self.cache["page_table"] = table
+        return ok_live
+
+    # -- degradation ladder ---------------------------------------------------
+
+    def _degrade(self, rung: str, reason: str):
+        import warnings
+
+        self.degraded[rung] = reason
+        warnings.warn(
+            f"{self.cfg.name}: degraded serving — {rung}: {reason}",
+            stacklevel=3)
+
+    def _degrade_speculation(self, reason: str):
+        """Ladder rung 1: speculative → plain decode.  The spec cache
+        layout (widened local rings, spec_k admission headroom) stays —
+        only the draft/verify tick is switched off, so the fallback is a
+        shape-compatible plain T=1 decode through the same compiled-step
+        cache, taken mid-flight without dropping a single request."""
+        self.spec_active = False
+        self._degrade("speculative", reason)
+
+    def _degrade_attention_kernel(self, reason: str):
+        """Ladder rung 2: Pallas paged kernel → the pure-JAX gather
+        reference (``layers.paged_decode_attention``), via the
+        process-global ``force_attention_kernel`` hook plus a rebuild of
+        the jitted steps — the override binds at trace time, so the old
+        compiled steps must be retired.  Process-global on purpose (the
+        fault is in the kernel, not this engine); tests that trigger it
+        restore the override in a finally block."""
+        from repro.models import layers
+
+        layers.force_attention_kernel(False)
+        self._degrade("attention_kernel", reason)
+        self._build_steps()
+
+    # -- the tick -------------------------------------------------------------
+
+    def _poison_mask(self) -> jax.Array:
+        """(B,) bool operand of the ``nan_logits`` injection point —
+        all-False in normal operation, so the compiled step has one
+        signature either way and injection costs no retrace."""
+        poison = np.zeros((self.max_batch,), bool)
+        fi = self.fault_injector
+        if fi is not None:
+            uids = fi.poison_uids(self.tick)
+            if uids is not None:
+                for slot, r in enumerate(self.slot_req):
+                    if r is not None and (not uids or r.uid in uids):
+                        poison[slot] = True
+        return jnp.asarray(poison)
+
+    def _run_decode(self, tokens, pos):
+        """Run the ONE compiled decode step with the folded numeric guard;
+        returns host (logits, per-slot finite flags).  Handles the
+        kernel-fault rung: a raising step on a paged engine degrades the
+        attention path to the pure-JAX reference and retries ONCE.
+
+        The retry is only safe because failures surface before the
+        donated cache buffers are consumed: the injected ``kernel_fault``
+        raises host-side ahead of the call, and real Pallas lowering
+        failures raise at trace/compile time — both leave ``self.cache``
+        intact for the reference-path retry."""
+        poison = self._poison_mask()
+        fi = self.fault_injector
+        try:
+            if fi is not None:
+                fi.check_kernel(self.tick, "attention_kernel" in self.degraded)
+            logits, ok, self.cache = self._decode(
+                self.params, self.cache, tokens, pos, poison)
+        except Exception as e:
+            if not self.paged or "attention_kernel" in self.degraded:
+                raise
+            self._degrade_attention_kernel(str(e))
+            logits, ok, self.cache = self._decode(
+                self.params, self.cache, tokens, pos, poison)
+        return np.asarray(logits, np.float32), np.asarray(ok)
 
     def step(self) -> int:
-        """One engine tick: admit + one batched decode step (speculative
-        draft + verify when ``spec_k`` > 0).  Returns the number of live
-        sequences that decoded this tick."""
+        """One engine tick: deadlines → admission → one batched decode
+        step (speculative draft + verify while the spec rung is healthy).
+        Returns the number of tokens committed this tick.  Every executed
+        tick beats the watchdog; dropped ticks (fault injection) do not —
+        which is exactly what ``HeartbeatMonitor`` stall detection keys
+        on."""
+        self.tick += 1
+        fi = self.fault_injector
+        if fi is not None:
+            fi.begin_tick(self.tick)
+            if fi.drop_tick(self.tick):
+                return 0  # lost tick: no admission, no decode, no heartbeat
+        self._enforce_deadlines(self.clock())
         self._admit()
         live = self._live_slots()
-        if not live:
-            return 0
-        if self.spec_k:
-            return self._spec_step(live)
+        if live:
+            if self.spec_active:
+                n = self._spec_step(live)
+            else:
+                n = self._plain_step(live)
+        else:
+            n = 0
+        if self.audit_every_step:
+            self.audit_pages()
+        if self.watchdog is not None:
+            self.watchdog.beat(0)
+        if live and self.degraded:
+            self.stats.fallback_ticks += 1
+        return n
+
+    def _plain_step(self, live: List[int]) -> int:
+        """One non-speculative decode tick over ``live``; returns committed
+        tokens (quarantined slots commit nothing)."""
         if self.paged:
-            self._publish_table(live)
+            live = self._publish_table(live)
+            if not live:
+                return 0
         tokens = jnp.asarray(self.slot_last_tok, jnp.int32)[:, None]
         pos = jnp.asarray(self.slot_pos, jnp.int32)
-        logits, self.cache = self._decode(self.params, self.cache, tokens, pos)
-        logits = logits[:, 0]
+        logits, ok = self._run_decode(tokens, pos)
+        rows = logits[:, 0]
+        committed = 0
         for slot in live:
             req = self.slot_req[slot]
-            tok = int(self._sample(logits[slot : slot + 1], req.temperature)[0])
+            if not ok[slot]:
+                self._quarantine_slot(slot, "non-finite logits (quarantined)")
+                continue
+            tok = int(self._sample(rows[slot : slot + 1], req.temperature)[0])
             req.output.append(tok)
             self.slot_last_tok[slot] = tok
             self.slot_pos[slot] += 1
             self.slot_remaining[slot] -= 1
+            committed += 1
             self._finish_if_done(slot)
         self.stats.decode_steps += 1
-        self.stats.decode_tokens += len(live)
-        return len(live)
+        self.stats.decode_tokens += committed
+        return committed
 
     # -- speculative decode ---------------------------------------------------
 
@@ -840,11 +1416,94 @@ class ServingEngine:
         same argument covers the draft cache (its accepted prefix is
         exactly what it wrote), paged pools (position-identity addressing),
         and widened local rings (window + spec_k slots; see
-        ``transformer.init_layer_cache``)."""
+        ``transformer.init_layer_cache``).
+
+        Failure model: a raising or numerically-poisoned draft chain
+        degrades speculation (rung 1) and serves this very tick plain —
+        the target never depends on the draft's health.  Per-slot
+        non-finite *verify* logits quarantine that slot only; its draft
+        proposals are excluded from acceptance accounting so
+        ``accept_rate`` stays meaningful."""
         k = self.spec_k
         B = self.max_batch
         pos0 = jnp.asarray(self.slot_pos, jnp.int32)
-        # -- draft phase: k sequential single-token steps ---------------------
+        try:
+            drafts, draft_dists = self._draft_chain(live, pos0, k, B)
+        except Exception as e:
+            # rung 1: dead/poisoned draft — the target serves on, plain
+            self._degrade_speculation(f"draft phase failed: {e}")
+            return self._plain_step(live)
+        # -- verify phase: ONE (B, k+1) multi-token target step ---------------
+        if self.paged:
+            live = self._publish_table(live, span=k)
+            if not live:
+                return 0
+        tokens = np.concatenate(
+            [np.asarray(self.slot_last_tok, np.int64)[:, None], drafts], axis=1)
+        arr, ok = self._run_decode(jnp.asarray(tokens, jnp.int32), pos0)
+        # -- commit the accepted prefix (+ the guaranteed bonus token) --------
+        committed_total = 0
+        tick_accepted = 0
+        proposed = 0
+        n_verified = len(live)
+        for slot in live:
+            req = self.slot_req[slot]
+            if not ok[slot]:
+                self._quarantine_slot(
+                    slot, "non-finite verify logits (quarantined)")
+                continue
+            remaining = int(self.slot_remaining[slot])
+            a, toks = self._accept(
+                arr[slot], drafts[slot], draft_dists[slot], req.temperature)
+            c = min(len(toks), remaining)
+            toks = toks[:c]
+            self.stats.draft_proposed += k
+            proposed += k
+            # committed drafts: toks is [d_1..d_a, bonus]; truncation by
+            # remaining can clip the bonus, in which case ALL c committed
+            # tokens are accepted drafts (min handles both cases)
+            self.stats.draft_accepted += min(a, c)
+            tick_accepted += min(a, c)
+            req.output.extend(toks)
+            self.slot_last_tok[slot] = toks[-1]
+            self.slot_pos[slot] += c
+            self.slot_remaining[slot] -= c
+            committed_total += c
+            self._finish_if_done(slot)
+        self.stats.decode_steps += 1
+        self.stats.decode_tokens += committed_total
+        self.stats.verified_positions += n_verified * (k + 1)
+        self._spec_ticks += 1
+        # feed measured acceptance back into the sizer (EMA): its
+        # committed_per_tick / throughput picks track observed traffic
+        # instead of the configured spec_accept prior
+        if (self.sizer is not None and getattr(self.sizer, "spec_k", 0) > 0
+                and proposed > 0):
+            tick_rate = min(1.0, tick_accepted / proposed)
+            self.sizer = self.sizer.observe_accept(tick_rate)
+            # rung 1, soft trigger: once warmed up, speculation switches
+            # itself off when the observed-acceptance payoff model says a
+            # plain tick would commit more tokens per second
+            if (self.spec_fallback_accept is not None
+                    and self._spec_ticks >= self.spec_fallback_min_ticks
+                    and not self.sizer.spec_worthwhile(
+                        max(1, n_verified),
+                        min_accept=self.spec_fallback_accept)):
+                self._degrade_speculation(
+                    f"acceptance collapsed (EMA {self.sizer.spec_accept:.3f}"
+                    f" < floor {self.spec_fallback_accept:g} or modeled "
+                    f"payoff < 1)")
+        return committed_total
+
+    def _draft_chain(self, live: List[int], pos0, k: int, B: int):
+        """The k+1 sequential draft steps proposing k tokens (see
+        ``_spec_step`` for why k+1).  Raises on a dead draft (injected or
+        real) or non-finite draft logits — per-slot masking cannot save a
+        chain whose proposals feed later steps, so the caller degrades
+        speculation instead."""
+        fi = self.fault_injector
+        if fi is not None:
+            fi.check_draft(self.tick)
         drafts = np.zeros((B, k), np.int64)
         draft_dists: List[Optional[np.ndarray]] = [None] * B
         needs_dists = any(
@@ -864,6 +1523,8 @@ class ServingEngine:
             if j == k:
                 break
             rows = np.asarray(dlogits[:, 0], np.float32)
+            if not np.isfinite(rows[live]).all():
+                raise FloatingPointError("non-finite draft logits")
             nxt = np.asarray(self.slot_last_tok).copy()
             for slot in live:
                 temp = self.slot_req[slot].temperature
@@ -873,48 +1534,7 @@ class ServingEngine:
                 if dist is not None:
                     draft_dists[slot][j] = dist
             cur = jnp.asarray(nxt, jnp.int32)[:, None]
-        # -- verify phase: ONE (B, k+1) multi-token target step ---------------
-        if self.paged:
-            self._publish_table(live, span=k)
-        tokens = np.concatenate(
-            [np.asarray(self.slot_last_tok, np.int64)[:, None], drafts], axis=1)
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens, jnp.int32), pos0)
-        arr = np.asarray(logits, np.float32)  # (B, k+1, V)
-        # -- commit the accepted prefix (+ the guaranteed bonus token) --------
-        committed_total = 0
-        tick_accepted = 0
-        for slot in live:
-            req = self.slot_req[slot]
-            remaining = int(self.slot_remaining[slot])
-            a, toks = self._accept(
-                arr[slot], drafts[slot], draft_dists[slot], req.temperature)
-            c = min(len(toks), remaining)
-            toks = toks[:c]
-            self.stats.draft_proposed += k
-            # committed drafts: toks is [d_1..d_a, bonus]; truncation by
-            # remaining can clip the bonus, in which case ALL c committed
-            # tokens are accepted drafts (min handles both cases)
-            self.stats.draft_accepted += min(a, c)
-            tick_accepted += min(a, c)
-            req.output.extend(toks)
-            self.slot_last_tok[slot] = toks[-1]
-            self.slot_pos[slot] += c
-            self.slot_remaining[slot] -= c
-            committed_total += c
-            self._finish_if_done(slot)
-        self.stats.decode_steps += 1
-        self.stats.decode_tokens += committed_total
-        self.stats.verified_positions += len(live) * (k + 1)
-        # feed measured acceptance back into the sizer (EMA): its
-        # committed_per_tick / throughput picks track observed traffic
-        # instead of the configured spec_accept prior
-        if self.sizer is not None and getattr(self.sizer, "spec_k", 0) > 0:
-            proposed = len(live) * k
-            if proposed > 0:
-                tick_rate = min(1.0, tick_accepted / proposed)
-                self.sizer = self.sizer.observe_accept(tick_rate)
-        return len(live)
+        return drafts, draft_dists
 
     def run_until_done(self, max_ticks: int = 10000) -> EngineStats:
         for _ in range(max_ticks):

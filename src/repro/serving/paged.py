@@ -37,8 +37,16 @@ NULL_PAGE = 0
 
 class PoolExhausted(RuntimeError):
     """Raised when an allocation cannot be satisfied.  Admission treats this
-    as back-pressure (the request stays queued); mid-decode it indicates a
-    misconfigured pool (see ServingEngine docstring) and is a hard error."""
+    as back-pressure (the request stays queued); mid-decode COW treats it as
+    a transient fault (the affected slot quarantines to the retry path —
+    see ``ServingEngine._publish_table``)."""
+
+
+class PageAuditError(AssertionError):
+    """The allocator's books diverged from the live page references — a
+    leak, a double-free, or a stale free-list entry.  An AssertionError
+    subclass on purpose: an audit failure is an engine-invariant bug, not
+    an operational condition to be retried."""
 
 
 class PageAllocator:
@@ -96,6 +104,48 @@ class PageAllocator:
                 self._free.append(p)
                 freed.append(p)
         return freed
+
+    def audit(self, live_refs: Sequence[int]):
+        """Assert the books balance against ``live_refs`` — every live
+        page reference, one entry per (owner, page) pair, e.g. the engine's
+        flattened slot→pages mapping.  Checks, in order:
+
+        * no live reference names the null page or an unallocated page;
+        * every page's refcount equals its live reference count (a
+          shortfall is a leak — the allocator thinks someone still owns
+          the page; an excess is a use-after-free in the making);
+        * the free list has no duplicates, never contains the null page,
+          and is exactly the set of zero-refcount pages.
+
+        Raises ``PageAuditError`` with the first divergence; cheap enough
+        (O(num_pages + refs)) to run after every engine tick under test.
+        """
+        expected = np.zeros_like(self.refcount)
+        expected[NULL_PAGE] = 1  # permanently held by the allocator itself
+        for p in live_refs:
+            if p == NULL_PAGE:
+                raise PageAuditError("null page appears as an owned reference")
+            if not (0 < p < self.num_pages):
+                raise PageAuditError(f"live reference to invalid page {p}")
+            expected[p] += 1
+        bad = np.nonzero(self.refcount != expected)[0]
+        if bad.size:
+            p = int(bad[0])
+            kind = "leaked" if self.refcount[p] > expected[p] else "over-shared"
+            raise PageAuditError(
+                f"page {p} {kind}: refcount {int(self.refcount[p])} != "
+                f"{int(expected[p])} live references "
+                f"({bad.size} page(s) diverge)")
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise PageAuditError("free list contains duplicates")
+        if NULL_PAGE in free:
+            raise PageAuditError("null page on the free list")
+        zero = {int(p) for p in np.nonzero(self.refcount == 0)[0]}
+        if free != zero:
+            raise PageAuditError(
+                f"free list {sorted(free)} != zero-refcount pages "
+                f"{sorted(zero)}")
 
 
 class PrefixRegistry:

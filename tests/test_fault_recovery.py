@@ -109,3 +109,74 @@ class TestShardlibProperties:
             assert spec[0] == "model"
         else:
             assert spec[0] is P.UNCONSTRAINED
+
+
+@pytest.mark.slow
+class TestEngineWatchdog:
+    """The launcher's fault monitors wired to the serving engine: the
+    engine beats a single-host ``HeartbeatMonitor`` once per *executed*
+    tick, so dropped/stalled ticks surface exactly like a silent training
+    host, and ``StragglerDetector`` consumes engine tick durations the
+    same way it consumes training step times."""
+
+    def _engine(self, clk, faults, **kw):
+        import repro.configs as C
+        from repro.models.api import get_api
+        from repro.serving.engine import ServingEngine
+        from repro.serving.faultinject import FaultInjector
+
+        cfg = C.get_config("tinyllama-1.1b", smoke=True)
+        params = get_api(cfg).init_params(cfg, jax.random.key(0))
+        return cfg, ServingEngine(
+            cfg, params, max_len=64, max_batch=1, clock=clk,
+            fault_injector=FaultInjector(faults, clock=clk), **kw)
+
+    def test_engine_watchdog_is_the_heartbeat_monitor(self):
+        from repro.distributed.fault import HeartbeatMonitor
+        from repro.serving.engine import Request
+        from repro.serving.faultinject import Fault, TickClock
+
+        clk = TickClock()
+        cfg, eng = self._engine(
+            clk, [Fault("drop_tick", tick=3, n_ticks=4)],
+            watchdog_timeout_s=2.5)
+        assert isinstance(eng.watchdog, HeartbeatMonitor)
+        rng = np.random.default_rng(0)
+        eng.submit(Request(uid=0,
+                           prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                           max_new_tokens=20))
+        health = []
+        for _ in range(10):
+            eng.step()
+            clk.advance(1.0)
+            health.append(eng.watchdog.healthy())
+        # alive while ticking, dead during the dropped-tick gap (no beats),
+        # alive again once the engine resumes — the training-host stall
+        # signal, produced by the serving tick loop
+        assert health[0] and not all(health) and health[-1]
+        assert eng.watchdog.dead_hosts() == []
+        assert eng.watchdog.silence_s(0) <= 1.0
+
+    def test_straggler_detector_flags_stalled_engine(self):
+        from repro.distributed.fault import StragglerDetector
+        from repro.serving.engine import Request
+        from repro.serving.faultinject import Fault, TickClock
+
+        clk = TickClock()
+        cfg, eng = self._engine(
+            clk, [Fault("slow_tick", tick=t, delay_s=2.0)
+                  for t in range(4, 8)])
+        rng = np.random.default_rng(0)
+        eng.submit(Request(uid=0,
+                           prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                           max_new_tokens=12))
+        det = StragglerDetector(n_hosts=3, window=8, ratio=1.5)
+        for _ in range(10):
+            t0 = clk()
+            eng.step()
+            # tick duration on the shared clock: slow_tick stalls land here
+            det.record(0, (clk() - t0) + 0.1)  # engine "host"
+            det.record(1, 0.1)  # nominal peers: the median the
+            det.record(2, 0.1)  # stalled engine is compared against
+            clk.advance(0.1)
+        assert det.stragglers() == [0]
