@@ -30,6 +30,7 @@ import traceback
 
 from benchmarks import (
     common,
+    continuous_serving,
     decode_microbench,
     degraded_serving,
     fig7_latency,
@@ -58,6 +59,7 @@ ALL = {
     "sharded_serving": sharded_serving.main,
     "speculative_serving": speculative_serving.main,
     "degraded_serving": degraded_serving.main,
+    "continuous_serving": continuous_serving.main,
     "decode": decode_microbench.main,
 }
 

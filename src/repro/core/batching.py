@@ -236,13 +236,15 @@ class BatchSizer:
         return dataclasses.replace(self, spec_accept=new)
 
     def step_time(self, batch: int, context_len: int | None = None,
-                  kv_bytes_per_token: float | None = None) -> float:
+                  kv_bytes_per_token: float | None = None,
+                  prefill_tokens: int = 0) -> float:
         # a speculative tick's verify step runs batch * (k+1) verified
         # positions through the weight stream — charge them all.  The KV
         # page stream is charged ONCE per tick (single-pass multi-query
         # kernel): per-position kv divides by (k+1) so kv_read stays the
         # plain-decode batch * ctx * kv_tok (perf_model.spec_step_time).
-        kv = self.kv_bytes_per_token if kv_bytes_per_token is None else kv_bytes_per_token
+        kv0 = self.kv_bytes_per_token if kv_bytes_per_token is None else kv_bytes_per_token
+        kv = kv0
         if self.spec_k > 0:
             kv = kv / (self.spec_k + 1)
         t = pm.decode_step_time(
@@ -267,6 +269,25 @@ class BatchSizer:
             t += (self.spec_k + 1) * pm.decode_step_time(
                 self.draft_n_params, batch, 0.0, 0,
                 self.peak_flops, self.hbm_bw, self.b_weight, self.n_chips,
+            )["t_proc"]
+        if prefill_tokens > 0:
+            # continuous batching: a tick that also advances chunked
+            # prefill (serving/engine.py ``prefill_budget``) pays ONE extra
+            # pass of the weight stream carrying the chunk's positions as
+            # batch rows — each chunk runs as its own (1, C) multi-token
+            # step on a private cache, so its weight traffic does NOT
+            # amortize with the decode batch's.  Its kv read is the
+            # growing causal prefix, charged at half the serving context
+            # (the mean prefix length over a prompt's chunks).  Without
+            # this term a latency-clamped ``pick`` admits batches whose
+            # real tick overruns the budget whenever prefill is in flight.
+            t += pm.decode_step_time(
+                self.n_params, prefill_tokens, kv0,
+                (self.context_len if context_len is None else context_len) // 2,
+                self.peak_flops, self.hbm_bw, self.b_weight, self.n_chips,
+                self.q_prune, self.q_overhead, self.sparse_compute,
+                model_parallel=self.model_parallel,
+                kv_parallel=self.kv_parallel,
             )["t_proc"]
         return t
 

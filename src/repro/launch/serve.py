@@ -43,10 +43,37 @@ from repro.models.api import (
     supports_paged_kv,
 )
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.faultinject import TickClock
+from repro.serving.loadgen import (
+    LengthMixture,
+    load_trace,
+    make_requests,
+    poisson_trace,
+    run_open_loop,
+)
 
 
 def _fmt_nopt(n: int) -> str:
     return "inf (memory-bound at any batch)" if n >= UNBOUNDED_NOPT else str(n)
+
+
+def _open_loop_mixture(p: int, n: int, cap: int) -> LengthMixture:
+    """Chat-style mixture anchored at the CLI lengths: 70% of arrivals at
+    the --prompt-len scale, 25% up to 2x, 5% at ~4x (the long-prefill
+    tail continuous batching exists for), every component clamped so
+    prompt + max_new fits the engine's admission bound ``cap``."""
+    n_rng = (max(1, n // 2), max(1, n))
+
+    def pr(a, b):
+        hi = max(1, cap - n_rng[1])
+        a = max(1, min(a, hi))
+        return (a, max(a, min(b, hi)))
+
+    return LengthMixture((
+        (0.70, pr(max(1, p // 2), p), n_rng),
+        (0.25, pr(p, 2 * p), n_rng),
+        (0.05, pr(4 * p, 4 * p), n_rng),
+    ))
 
 
 def _build_plan(api, cfg, params, pc: PlanConfig, cache_dir: str | None):
@@ -135,6 +162,23 @@ def main(argv=None):
                          "pressure), 'priority' preempts the lowest-priority "
                          "slot (snapshot + requeue, prefill-from-prefix "
                          "readmission)")
+    ap.add_argument("--prefill-chunk", type=int, default=0, metavar="C",
+                    help="continuous batching: prefill long prompts in "
+                         "C-token chunks interleaved with decode ticks "
+                         "instead of synchronously at admission (0 = "
+                         "synchronous inline prefill)")
+    ap.add_argument("--prefill-budget", type=int, default=0, metavar="T",
+                    help="max prompt tokens advanced per tick across all "
+                         "in-flight chunked prefills (0 = one chunk per "
+                         "tick; needs --prefill-chunk)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0, metavar="R",
+                    help="open-loop load: seeded Poisson arrivals at R "
+                         "requests per engine tick instead of submitting "
+                         "all --requests upfront (0 = closed-loop)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="open-loop load: replay a JSONL arrival trace "
+                         "(serving/loadgen format; takes precedence over "
+                         "--arrival-rate)")
     args = ap.parse_args(argv)
 
     cfg = C.get_config(args.arch, smoke=args.smoke)
@@ -219,6 +263,12 @@ def main(argv=None):
             f"-> kv shard degree {kv_parallel}); per-shard pool bytes equal "
             f"the global pool — budget --pool-pages accordingly",
             stacklevel=1)
+    open_loop = bool(args.trace) or args.arrival_rate > 0
+    engine_kw = {}
+    if open_loop:
+        # open-loop timing is simulated: one tick = one time unit of the
+        # arrival schedule, so deadlines/TTFT/latency are seed-reproducible
+        engine_kw["clock"] = TickClock()
     engine = ServingEngine(cfg, params, max_len=args.max_len,
                            max_batch=args.max_batch, plan=plan,
                            kv_dtype=kv_dtype,
@@ -229,10 +279,16 @@ def main(argv=None):
                            mesh=mesh, rules=rules,
                            draft_cfg=draft_cfg, draft_params=draft_params,
                            spec_k=spec_k,
+                           prefill_chunk=args.prefill_chunk or None,
+                           prefill_budget=args.prefill_budget or None,
                            request_timeout_s=args.request_timeout or None,
                            ttft_deadline_s=args.ttft_deadline or None,
                            max_retries=args.max_retries,
-                           evict_policy=args.evict_policy)
+                           evict_policy=args.evict_policy,
+                           **engine_kw)
+    if engine.prefill_chunk is not None:
+        print(f"[serve] continuous batching: {engine.prefill_chunk}-token "
+              f"prefill chunks, {engine.prefill_budget} tok/tick budget")
     if engine.paged:
         print(f"[serve] paged KV cache: {engine.num_pages} pages x "
               f"{engine.page_size} tok (pool "
@@ -253,25 +309,60 @@ def main(argv=None):
                             kv_parallel=kv_parallel).n_opt
         print(f"[serve] plan-corrected n_opt={_fmt_nopt(n_corr)}")
     rng = np.random.default_rng(args.seed)
-    for uid in range(args.requests):
+
+    def _extras():
         extras = {}
         if "patches" in api.extra_keys:
             extras["patches"] = rng.normal(size=(cfg.n_patches, cfg.d_model)).astype(np.float32)
         if "frames" in api.extra_keys:
             extras["frames"] = rng.normal(size=(cfg.n_frames, cfg.d_model)).astype(np.float32)
-        engine.submit(Request(
-            uid=uid,
-            prompt=rng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new,
-            extras=extras or None,
-        ))
-    t0 = time.time()
-    stats = engine.run_until_done()
-    dt = time.time() - t0
-    print(f"[serve] completed {stats.completed} requests in {dt:.2f}s; "
-          f"decode steps {stats.decode_steps}, tokens {stats.decode_tokens}, "
-          f"mean batch {stats.mean_batch:.2f} "
-          f"({stats.decode_tokens/max(dt,1e-9):.1f} tok/s on this host)")
+        return extras or None
+
+    if open_loop:
+        if args.trace:
+            arrivals = load_trace(args.trace)
+            print(f"[serve] replaying {len(arrivals)} arrivals from "
+                  f"{args.trace}")
+        else:
+            cap = args.max_len - api.prefix_len(cfg) - spec_k
+            mix = _open_loop_mixture(args.prompt_len, args.max_new, cap)
+            arrivals = poisson_trace(args.arrival_rate, args.requests, mix,
+                                     seed=args.seed)
+            print(f"[serve] poisson arrivals: {args.arrival_rate}/tick, "
+                  f"n={len(arrivals)}, seed={args.seed}")
+        reqs = make_requests(arrivals, cfg.vocab, seed=args.seed)
+        for r in reqs:
+            r.extras = _extras()
+        t0 = time.time()
+        report = run_open_loop(engine, arrivals, reqs, seed=args.seed)
+        dt = time.time() - t0
+        stats = engine.stats
+        s = report.summary()
+        print(f"[serve] open-loop: {s['completed']}/{s['n_requests']} "
+              f"completed in {s['ticks']} ticks ({dt:.2f}s wall); "
+              f"p50/p99 TTFT {s['p50_ttft_s']:.1f}/{s['p99_ttft_s']:.1f} "
+              f"ticks, p50/p99 latency {s['p50_latency_s']:.1f}/"
+              f"{s['p99_latency_s']:.1f} ticks, "
+              f"{s['tokens_per_s']:.2f} committed tok/tick "
+              f"(sizer n_opt {_fmt_nopt(sizer.n_opt)}), "
+              f"mean batch {s['mean_batch']:.2f}, "
+              f"leaked pages {s['leaked_pages']}")
+    else:
+        for uid in range(args.requests):
+            engine.submit(Request(
+                uid=uid,
+                prompt=rng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32),
+                max_new_tokens=args.max_new,
+                extras=_extras(),
+            ))
+        t0 = time.time()
+        stats = engine.run_until_done()
+        dt = time.time() - t0
+    if not open_loop:
+        print(f"[serve] completed {stats.completed} requests in {dt:.2f}s; "
+              f"decode steps {stats.decode_steps}, tokens {stats.decode_tokens}, "
+              f"mean batch {stats.mean_batch:.2f} "
+              f"({stats.decode_tokens/max(dt,1e-9):.1f} tok/s on this host)")
     if engine.paged:
         print(f"[serve] paged: mean admitted context {stats.mean_context:.1f} "
               f"tok (sizer charged ctx {ctx}), "

@@ -92,6 +92,27 @@ donor never sees its writable tail page shared and decode-time COW is a
 defended-against invariant rather than a steady-state cost.  Admission
 under pool exhaustion queues (back-pressure) instead of crashing.
 
+Continuous batching (``prefill_chunk=C`` / ``prefill_budget=T``)
+-----------------------------------------------------------------
+Synchronous admission runs a whole prompt's prefill inline, stalling
+every decoding neighbor for the full prompt — head-of-line blocking that
+caps the weight reuse the batch exists for.  With ``prefill_chunk`` set,
+admission only reserves the slot; the prompt then advances at most
+``prefill_budget`` tokens per tick (FIFO across in-flight prefills, no
+overtaking) as ``(1, C)`` multi-token decode steps on a private batch-1
+cache, interleaved with the batched decode step — decode ticks continue
+while long prompts stream in, and tokens reach the caller per-request the
+tick they commit (``Request.on_token``).  In paged mode the slot's pages
+grow chunk by chunk but its published table row stays all-NULL until the
+DECODING transition, so batched-decode scatters from a prefilling slot
+are absorbed by the null page (docs/memory_model.md).  Chunked prefill
+is bit-exact versus the one-shot prefill (causal attention over a prefix
+is a pure function of tokens/positions/params, and the ragged tail is
+covered by an overlapped — identically recomputed — final chunk:
+serving/scheduler.py), so greedy streams match the synchronous engine
+token for token.  ``serving/loadgen.py`` drives the engine under seeded
+open-loop arrival traces and reports TTFT / latency percentiles.
+
 Failure model (``request_timeout_s`` / ``evict_policy`` / ...)
 ---------------------------------------------------------------
 One misbehaving request in a shared batch threatens every neighbor's
@@ -141,6 +162,7 @@ from repro.serving.paged import (
     PoolExhausted,
     PrefixRegistry,
 )
+from repro.serving.scheduler import PrefillJob, TickBudget, chunk_spans
 
 # paged pool leaf -> its name in a contiguous (prefill) cache
 _PAGED_KEYS = (
@@ -176,8 +198,12 @@ TERMINAL_STATES = frozenset(
 _TRANSITIONS = {
     RequestState.QUEUED: {RequestState.PREFILLING, RequestState.TIMED_OUT,
                           RequestState.FAILED},
+    # PREFILLING → EVICTED: under continuous batching a chunked prefill
+    # spans ticks and occupies a slot, so priority preemption can land on
+    # it mid-prefill (nothing committed yet: readmission recomputes).
     RequestState.PREFILLING: {RequestState.DECODING, RequestState.QUEUED,
-                              RequestState.FAILED, RequestState.TIMED_OUT},
+                              RequestState.FAILED, RequestState.TIMED_OUT,
+                              RequestState.EVICTED},
     RequestState.DECODING: {RequestState.FINISHED, RequestState.FAILED,
                             RequestState.EVICTED, RequestState.TIMED_OUT,
                             RequestState.QUEUED},
@@ -206,6 +232,11 @@ class Request:
     priority: int = 0
     ttft_deadline_s: Optional[float] = None  # queue-to-first-token budget
     deadline_s: Optional[float] = None  # total-latency budget
+    # streaming: called as on_token(request, token) the tick each token
+    # commits (first token included) — continuous-serving consumers read
+    # streams, not end-of-run transcripts.  Callbacks run on the engine
+    # thread and must not raise.
+    on_token: Optional[Callable[["Request", int], None]] = None
     # filled by the engine:
     output: Optional[List[int]] = None
     done: bool = False
@@ -263,6 +294,13 @@ class EngineStats:
     timed_out: int = 0  # TTFT or total-latency deadline exceeded
     retried: int = 0  # transient-failure requeues (bounded by max_retries)
     fallback_ticks: int = 0  # ticks served in any degraded mode
+    # continuous batching: prefill traffic.  ``prefill_tokens`` counts
+    # prompt tokens advanced through the model in BOTH modes (chunked and
+    # synchronous inline), so prefill_tokens + decode_tokens is a
+    # mode-comparable work-unit counter; ``prefill_chunks`` counts only
+    # chunked-prefill decode-step calls.
+    prefill_chunks: int = 0
+    prefill_tokens: int = 0
 
     @property
     def mean_batch(self) -> float:
@@ -309,6 +347,13 @@ class ServingEngine:
         draft_cfg=None,  # small model proposing spec_k draft tokens per tick
         draft_params=None,
         spec_k: int = 0,  # draft tokens per tick (0 = plain decode)
+        # continuous batching: prefill long prompts in fixed-size chunks
+        # interleaved with decode ticks (None = synchronous inline prefill
+        # at admission, the pre-continuous behavior).  prefill_budget caps
+        # prompt tokens advanced per tick across all in-flight prefills
+        # (default: one chunk per tick).
+        prefill_chunk: Optional[int] = None,
+        prefill_budget: Optional[int] = None,
         seed: int = 0,
         # -- failure model ------------------------------------------------
         request_timeout_s: Optional[float] = None,  # default total deadline
@@ -386,6 +431,36 @@ class ServingEngine:
                 raise ValueError(
                     f"draft vocab {draft_cfg.vocab} != target vocab "
                     f"{cfg.vocab}: verification compares token ids")
+        # continuous batching: chunked prefill runs each chunk as a (1, C)
+        # multi-token decode step on a private batch-1 cache — positions
+        # [done, done + C) of the prompt — which needs exactly the
+        # positionally-addressed-cache property speculation needs (stale
+        # ring entries invisible until overwritten, multi-position decode).
+        # Attention over a causal prefix is a pure function of (tokens,
+        # positions, params), so the chunked logits — and the first sampled
+        # token — are bit-identical to the one-shot prefill's.
+        self.prefill_chunk = self.prefill_budget = None
+        if prefill_chunk is not None:
+            prefill_chunk = int(prefill_chunk)
+            if prefill_chunk <= 0:
+                raise ValueError(
+                    f"prefill_chunk must be positive, got {prefill_chunk}")
+            if not supports_spec_decode(cfg):
+                import warnings
+
+                warnings.warn(
+                    f"{cfg.name}: chunked prefill needs multi-token decode "
+                    f"on a positionally-addressed cache ({cfg.family} does "
+                    f"not qualify); serving synchronous prefill", stacklevel=2)
+            else:
+                if any(k == "local" for k in cfg.layer_kinds):
+                    # a chunk wider than a sliding-window ring would
+                    # scatter duplicate ring indices within ONE step
+                    # (nondeterministic winner): clamp to the window
+                    prefill_chunk = min(prefill_chunk, cfg.local_window)
+                self.prefill_chunk = prefill_chunk
+                self.prefill_budget = max(
+                    int(prefill_budget or 0), prefill_chunk)
         # the cache stream the sizer charges: per-token bytes at this
         # engine's cache dtype and the *expected* context — max_len for the
         # contiguous cache (the reservation is real traffic: ring length ==
@@ -446,6 +521,11 @@ class ServingEngine:
         self.slot_remaining = np.zeros((max_batch,), np.int32)
         self.slot_last_tok = np.zeros((max_batch,), np.int32)
         self.slot_admit_seq = np.zeros((max_batch,), np.int64)  # admission order
+        # continuous batching: slot -> in-flight chunked prefill (or None).
+        # A slot with a job is live (occupies pages, sees deadlines, can be
+        # evicted) but is NOT in the decode batch (_decoding_slots).
+        self.slot_prefill: List[Optional[PrefillJob]] = [None] * max_batch
+        self.last_tick_prefill_tokens = 0  # budget spent by the last tick
         self.queue: deque = deque()
         self.stats = EngineStats()
         # -- failure model -------------------------------------------------
@@ -674,6 +754,20 @@ class ServingEngine:
     def _live_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
 
+    def _decoding_slots(self) -> List[int]:
+        """Slots in this tick's decode batch: live slots minus in-flight
+        chunked prefills (their KV is still private to the job's batch-1
+        cache and their published page-table row is all-NULL)."""
+        return [i for i, r in enumerate(self.slot_req)
+                if r is not None and self.slot_prefill[i] is None]
+
+    def _emit(self, req: Request, toks) -> None:
+        """Streaming: deliver just-committed tokens to the request's
+        callback (called after ``req.output`` grew by ``toks``)."""
+        if req.on_token is not None:
+            for t in toks:
+                req.on_token(req, int(t))
+
     @property
     def pages_in_use(self) -> int:
         return self.allocator.used_pages if self.paged else 0
@@ -686,6 +780,7 @@ class ServingEngine:
         masks keep stale entries invisible to later occupants, and the
         paged table row reverts to the null page."""
         self.slot_req[slot] = None
+        self.slot_prefill[slot] = None  # in-flight chunk job dies with the slot
         if self.paged:
             self._free_slot_pages(slot)
 
@@ -838,6 +933,7 @@ class ServingEngine:
         for k, v in (req.extras or {}).items():
             batch[k] = jnp.asarray(v)[None]
         logits, cache1 = self._prefill1(self.params, batch, cache1)
+        self.stats.prefill_tokens += len(tokens)
         row = logits[:, -1]
         ok = bool(jnp.isfinite(row).all())
         tok = self._sample(row, req.temperature)
@@ -875,6 +971,7 @@ class ServingEngine:
         self.slot_last_tok[slot] = first_tok
         req.transition(RequestState.DECODING)
         req.output.append(first_tok)
+        self._emit(req, (first_tok,))
         self.slot_remaining[slot] -= 1
         if req.first_token_t is None:
             req.first_token_t = self.clock()
@@ -916,6 +1013,12 @@ class ServingEngine:
             remaining = req.max_new_tokens - len(req.output)
             assert S + remaining + self.spec_k <= self.max_len, \
                 "request (+ spec_k speculation headroom) exceeds max_len"
+            if self.prefill_chunk is not None:
+                # continuous batching: admission only reserves the slot and
+                # records the job — no model work here.  The chunks run in
+                # _run_prefill_chunks under the per-tick token budget.
+                self._enqueue_prefill(slot, req, tokens, S, resumed)
+                continue
             tok, cache1, ok = self._prefill_request(req, tokens)
             if not ok:
                 self._retry_or_fail(req, "non-finite prefill logits")
@@ -974,6 +1077,31 @@ class ServingEngine:
             req.transition(RequestState.PREFILLING)
             retained = shared_pages[:n_full]
             self.allocator.retain(retained)
+            if self.prefill_chunk is not None:
+                # continuous batching: claim only the shared prefix (plus
+                # the boundary-page COW copy) now; the rest of the pages
+                # grow chunk by chunk (_grow_slot_pages) and the table row
+                # stays all-NULL until the DECODING transition, so batched-
+                # decode scatters from this slot land on the null page.
+                # The can_alloc gate above still sized the EVENTUAL need —
+                # admission keeps its back-pressure semantics; a raced-away
+                # pool mid-prefill is a transient fault (retry path).
+                try:
+                    fresh = self._alloc_pages(boundary)
+                except PoolExhausted as e:
+                    self.allocator.release(retained)
+                    self._retry_or_fail(
+                        req, f"page pool exhausted at admission: {e}")
+                    continue
+                if boundary:
+                    self._copy_page(shared_pages[n_full], fresh[0])
+                    self.stats.cow_copies += 1
+                self.stats.pages_shared += n_full
+                self.slot_pages[slot] = retained + fresh
+                self._enqueue_prefill(slot, req, tokens, S, resumed,
+                                      shared_len=shared_len,
+                                      prompt_key=prompt_key)
+                continue
             try:
                 fresh = self._alloc_pages(n_total - n_full)
             except PoolExhausted as e:
@@ -1009,6 +1137,122 @@ class ServingEngine:
             if self.registry is not None:
                 self.registry.register(prompt_key, pages[: math.ceil(S / ps)])
             self._start_slot(slot, req, S, tok, tokens, resumed)
+
+    # -- chunked prefill (continuous batching) --------------------------------
+
+    def _enqueue_prefill(self, slot: int, req: Request, tokens: np.ndarray,
+                         S: int, resumed: bool, shared_len: int = 0,
+                         prompt_key=None):
+        """Reserve ``slot`` for a multi-tick chunked prefill: the slot is
+        live from here (deadlines apply, eviction can land on it) but joins
+        the decode batch only at the DECODING transition."""
+        self.slot_req[slot] = req
+        self._admit_seq += 1
+        self.slot_admit_seq[slot] = self._admit_seq
+        self.slot_prefill[slot] = PrefillJob(
+            req=req, tokens=np.asarray(tokens, np.int32), S=S,
+            resumed=resumed, shared_len=shared_len, prompt_key=prompt_key)
+
+    def _run_prefill_chunks(self):
+        """Advance in-flight chunked prefills, oldest admission first, by
+        at most ``prefill_budget`` prompt tokens this tick.  FIFO with no
+        overtaking: when the next span of the oldest job doesn't fit the
+        remaining budget, the tick's prefill work ends — younger (smaller)
+        jobs cannot starve an older one by slipping into the gap."""
+        budget = TickBudget(self.prefill_budget)
+        jobs = sorted(
+            (s for s in range(self.max_batch)
+             if self.slot_prefill[s] is not None),
+            key=lambda s: int(self.slot_admit_seq[s]))
+        for slot in jobs:
+            while self.slot_prefill[slot] is not None:
+                job = self.slot_prefill[slot]
+                start, stop = next(
+                    (a, b) for a, b in chunk_spans(job.S, self.prefill_chunk)
+                    if b > job.done)
+                if not budget.try_charge(stop - start):
+                    self.last_tick_prefill_tokens = budget.used
+                    return
+                self._run_prefill_chunk(slot, job, start, stop)
+        self.last_tick_prefill_tokens = budget.used
+
+    def _run_prefill_chunk(self, slot: int, job: PrefillJob,
+                           start: int, stop: int):
+        """One chunk: a ``(1, stop - start)`` multi-token decode step over
+        the prompt span at positions [start, stop) of the job's private
+        batch-1 cache.  The final (possibly overlapped) chunk's last logits
+        row is the full prefill's last row bit-for-bit (scheduler.py
+        explains why the overlap is a no-op rewrite); a non-finite chunk
+        sends the request to the retry path like a poisoned inline prefill."""
+        req = job.req
+        if job.cache1 is None:
+            job.cache1 = self.api.init_cache(
+                self.cfg, 1, self.max_len, self.dtype, kv_dtype=self.kv_dtype,
+                **self._spec_cache_kw(),
+            )
+        toks = jnp.asarray(job.tokens[start:stop], jnp.int32)[None]
+        pos = jnp.asarray([start], jnp.int32)
+        logits, ok, job.cache1 = self._decode(
+            self.params, job.cache1, toks, pos, jnp.zeros((1,), bool))
+        job.done = stop
+        self.stats.prefill_chunks += 1
+        self.stats.prefill_tokens += stop - start
+        if not bool(np.asarray(ok)[0]):
+            self._quarantine_slot(
+                slot, "non-finite prefill logits (chunked)")
+            return
+        if self.paged:
+            try:
+                # in-flight page growth: capacity tracks the prefilled
+                # frontier chunk by chunk (allocator-charged, row unpublished
+                # — docs/memory_model.md § in-flight prefill accounting)
+                self._grow_slot_pages(slot, math.ceil(stop / self.page_size))
+            except PoolExhausted as e:
+                self._quarantine_slot(
+                    slot, f"page pool exhausted during chunked prefill: {e}")
+                return
+        if job.finished:
+            job.last_row = logits[:, -1]
+            self._finish_prefill_job(slot, job)
+
+    def _finish_prefill_job(self, slot: int, job: PrefillJob):
+        """DECODING transition: top the pages up to the decode-complete
+        count, scatter the private cache into the slot (pages or row),
+        publish the table row, register the prefix, sample the first
+        token, and hand the slot to ``_start_slot`` exactly like the
+        synchronous admission path."""
+        req = job.req
+        tok = int(self._sample(job.last_row, req.temperature)[0])
+        if self.paged:
+            ps = self.page_size
+            remaining = req.max_new_tokens - len(req.output or [])
+            try:
+                self._grow_slot_pages(slot, math.ceil((job.S + remaining) / ps))
+            except PoolExhausted as e:
+                self._quarantine_slot(
+                    slot, f"page pool exhausted at prefill completion: {e}")
+                return
+            self._write_slot_paged(slot, job.cache1,
+                                   start=job.shared_len, stop=job.S)
+            pages = self.slot_pages[slot]
+            self._table[slot, :] = NULL_PAGE
+            self._table[slot, : len(pages)] = pages
+            if self.registry is not None and job.prompt_key is not None:
+                self.registry.register(
+                    job.prompt_key, pages[: math.ceil(job.S / ps)])
+        else:
+            self._write_slot(slot, job.cache1)
+        self.slot_prefill[slot] = None
+        self._start_slot(slot, req, job.S, tok, job.tokens, job.resumed)
+
+    def _grow_slot_pages(self, slot: int, n_pages: int):
+        """In-flight prefill page growth: extend this slot's page list to
+        ``n_pages``.  The allocator is charged now but the table row stays
+        unpublished until the DECODING transition.  Raises ``PoolExhausted``
+        — callers abort the one job to the retry path, never the batch."""
+        need = n_pages - len(self.slot_pages[slot])
+        if need > 0:
+            self.slot_pages[slot].extend(self._alloc_pages(need))
 
     # -- paged-pool plumbing --------------------------------------------------
 
@@ -1049,6 +1293,16 @@ class ServingEngine:
         for slot in range(self.max_batch):
             pages = self.slot_pages[slot]
             row = self._table[slot]
+            if self.slot_prefill[slot] is not None:
+                # in-flight chunked prefill: pages are allocator-charged
+                # (the refs above include them) but the row must stay
+                # all-NULL until the DECODING transition — a published row
+                # would let batched-decode scatters corrupt real pages.
+                if not np.all(row == NULL_PAGE):
+                    raise PageAuditError(
+                        f"slot {slot}: prefilling slot published table row "
+                        f"{row.tolist()} before its DECODING transition")
+                continue
             if not (np.array_equal(row[: len(pages)],
                                    np.asarray(pages, np.int32))
                     and np.all(row[len(pages):] == NULL_PAGE)):
@@ -1286,7 +1540,9 @@ class ServingEngine:
                 return 0  # lost tick: no admission, no decode, no heartbeat
         self._enforce_deadlines(self.clock())
         self._admit()
-        live = self._live_slots()
+        if self.prefill_chunk is not None:
+            self._run_prefill_chunks()
+        live = self._decoding_slots()
         if live:
             if self.spec_active:
                 n = self._spec_step(live)
@@ -1321,6 +1577,7 @@ class ServingEngine:
                 continue
             tok = int(self._sample(rows[slot : slot + 1], req.temperature)[0])
             req.output.append(tok)
+            self._emit(req, (tok,))
             self.slot_last_tok[slot] = tok
             self.slot_pos[slot] += 1
             self.slot_remaining[slot] -= 1
@@ -1465,6 +1722,7 @@ class ServingEngine:
             self.stats.draft_accepted += min(a, c)
             tick_accepted += min(a, c)
             req.output.extend(toks)
+            self._emit(req, toks)
             self.slot_last_tok[slot] = toks[-1]
             self.slot_pos[slot] += c
             self.slot_remaining[slot] -= c
