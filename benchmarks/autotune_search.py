@@ -1,0 +1,221 @@
+"""Offline plan autotuner — search determinism, constraint respect, and the
+tuned-vs-uniform throughput win (core/autotune).
+
+Four assertions, mirroring ISSUE/paper acceptance:
+
+  1. determinism — two searches at the same seed produce bit-identical
+     traces and the same winner (the artifact is reproducible).
+  2. tuned >= uniform on MODELED tokens/s (trial 0 seeds the uniform
+     default, so this holds by construction whenever uniform is feasible).
+  3. the accuracy budget is respected: every oracle run that admitted a
+     sparsity level stayed within the paper's 1.5% drop, and the winner's
+     max q_prune is an admitted level.
+  4. balance == 1.00 at the tuned operating point (t_calc == t_mem at the
+     winner's n_opt — the paper's machine-balance check), and the tuned
+     plan's MEASURED tokens/s (engine tick loop, warmup excluded) strictly
+     beats the uniform-default plan's.
+
+The search runs on the tinyllama smoke config with the serving knobs
+pinned (fp KV, contiguous cache): this host measures the *weight plan*
+win, and wall-clock on a CPU host would misrank kv/paging knobs that only
+pay off on accelerator HBM.  Hardware constants in Constraints are scaled
+so the smoke model has a finite balance point (at TPU constants a 115k-
+param model is KV-bound at any batch — the perf model correctly says so).
+The full kv/page/spec space is exercised by tools/autotune.py and
+tests/test_autotune.py.
+
+The winning artifact is also served through ``serve.py --autotune-plan``
+end-to-end, so the bench exercises exactly the path a user deploys.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import io
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from benchmarks.common import emit
+from repro.core import autotune as AT
+from repro.launch import serve
+from repro.models.api import get_api
+from repro.serving.engine import Request, ServingEngine
+
+ARCH = "tinyllama-1.1b"  # served as the smoke config: arch "tinyllama-smoke"
+
+SPACE = AT.SearchSpace(
+    q_prunes=(0.0, 0.25, 0.5, 0.75),
+    kinds=("quant_sparse", "block_sparse", "quant", "dense"),
+    blocks=(16,),
+    kv_dtypes=("fp",),
+    page_sizes=(0,),
+    min_size=1024,
+    min_contract=16,
+)
+
+# CPU-scale roofline so the smoke model's balance point is finite and the
+# modeled batch lands inside the measured engine's range (see module doc).
+CONS = AT.Constraints(
+    max_batch=8,
+    max_len=48,
+    prompt_len=8,
+    max_new=16,
+    pool_bytes=64e6,
+    peak_flops=3.3e11,
+    hbm_bw=1e11,
+)
+
+
+def _run_round(engine: ServingEngine, vocab: int, *, rep: int, n_req: int,
+               prompt_len: int, max_new: int, seed: int) -> float:
+    """One measurement round: submit ``n_req`` fresh requests, drain the
+    engine, return committed tokens/s for the round."""
+    rng = np.random.default_rng(seed + rep)
+    before = engine.stats.decode_tokens
+    for uid in range(n_req):
+        engine.submit(Request(
+            uid=rep * 10_000 + uid,
+            prompt=rng.integers(0, vocab, size=prompt_len).astype(np.int32),
+            max_new_tokens=max_new,
+        ))
+    t0 = time.perf_counter()
+    engine.run_until_done()
+    dt = time.perf_counter() - t0
+    return (engine.stats.decode_tokens - before) / dt
+
+
+def _measure_ab(eng_a: ServingEngine, eng_b: ServingEngine, vocab: int, *,
+                reps: int, **kw) -> tuple[float, float]:
+    """Best-of-``reps`` tokens/s for two engines with INTERLEAVED rounds
+    (A, B, A, B, ...) so host-load drift hits both sides equally; round 0
+    of each is compile warmup and is discarded."""
+    best_a = best_b = 0.0
+    for rep in range(reps + 1):
+        tok_a = _run_round(eng_a, vocab, rep=rep, **kw)
+        tok_b = _run_round(eng_b, vocab, rep=rep, **kw)
+        if rep > 0:
+            best_a = max(best_a, tok_a)
+            best_b = max(best_b, tok_b)
+    return best_a, best_b
+
+
+def main(smoke: bool = False):
+    trials = 16 if smoke else 48
+    cfg = C.get_config(ARCH, smoke=True)
+    api = get_api(cfg)
+
+    # one evaluator shared by both determinism runs: memoized verdicts make
+    # the second search hit the oracle cache, and per-q results are
+    # independent of call order so sharing cannot skew the comparison
+    acc = AT.CalibrationEvaluator(
+        AT.CalibrationConfig.smoke(), max_acc_drop=CONS.max_acc_drop)
+    kw = dict(space=SPACE, constraints=CONS, strategy="anneal",
+              trials=trials, seed=0, accuracy=acc)
+    res = AT.search(cfg, **kw)
+    res2 = AT.search(cfg, **kw)
+
+    # 1. bit-determinism of the seeded search
+    assert res.trace == res2.trace, "same-seed searches diverged"
+    assert res.best == res2.best
+    # 2. the winner never loses to the uniform-default seed (modeled)
+    assert res.prediction.tokens_per_s >= res.uniform.tokens_per_s
+    # 3. accuracy budget respected on the calibration set
+    admitted = {0.0}
+    for e in res.acc_evals:
+        if e["ok"]:
+            assert e["drop"] <= CONS.max_acc_drop + 1e-9, e
+            admitted.add(round(e["q"], 9))
+    assert round(res.prediction.stats.max_q, 9) in admitted, (
+        f"winner prunes at q={res.prediction.stats.max_q} without an "
+        f"admitted oracle verdict (admitted: {sorted(admitted)})")
+    # 4a. machine balance at the tuned operating point: t_calc == t_mem at
+    # the winner's n_opt (sharded_serving's check, through the tuner)
+    balance = res.prediction.balance
+    assert abs(balance - 1.0) < 1e-6, f"balance {balance} != 1.00"
+
+    emit(
+        "autotune/search", None,
+        f"strategy=anneal;trials={trials};seed=0;"
+        f"best_tok_s={res.prediction.tokens_per_s:.0f};"
+        f"uniform_tok_s={res.uniform.tokens_per_s:.0f};"
+        f"speedup={res.prediction.tokens_per_s / res.uniform.tokens_per_s:.3f};"
+        f"deterministic=True",
+    )
+    emit(
+        "autotune/balance", None,
+        f"balance={balance:.2f};n_opt={res.prediction.n_opt:.2f};"
+        f"batch={res.prediction.batch}",
+    )
+    max_drop = max((e["drop"] for e in res.acc_evals if e["ok"]), default=0.0)
+    emit(
+        "autotune/accuracy", None,
+        f"budget={CONS.max_acc_drop};max_q={res.prediction.stats.max_q:.2f};"
+        f"evals={len(res.acc_evals)};max_admitted_drop={max_drop:.4f};"
+        f"ok=True",
+    )
+    for r in res.trace:
+        emit(
+            f"autotune/trace/{r['trial']:03d}", None,
+            f"trial={r['trial']};tok_s={r['tokens_per_s']:.0f};"
+            f"feasible={r['feasible']};accepted={r['accepted']};"
+            f"best_tok_s={r['best_tokens_per_s']:.0f}",
+        )
+
+    # 4b. measured A/B: the tuned plan vs the uniform-default plan through
+    # the real engine tick loop, identical workload.  Each plan is served
+    # at its own modeled operating point (the paper sizes batch to n_opt
+    # per configuration) — the tuned engine takes its batch from the
+    # artifact via from_tuned, the uniform engine from its own prediction.
+    doc = AT.tuned_plan_doc(cfg, res, space=SPACE, constraints=CONS)
+    with tempfile.TemporaryDirectory() as td:
+        art = os.path.join(td, "tuned.json")
+        AT.save_tuned(art, doc)
+        doc = AT.load_tuned(art)
+
+        params = api.init_params(cfg, jax.random.key(0))
+        plan_t = api.compress(cfg, params, AT.plan_config(doc))
+        plan_u = api.compress(cfg, params, AT.candidate_plan_config(
+            AT.uniform_candidate(cfg, AT.normalize_space(cfg, SPACE)), SPACE))
+        # enough requests to keep both engines saturated past their batch
+        # (the win is committed tokens/tick; short runs drown it in the
+        # host's tick-dispatch jitter)
+        mkw = dict(n_req=6 * CONS.max_batch, prompt_len=CONS.prompt_len,
+                   max_new=CONS.max_new, seed=0)
+        eng_t = ServingEngine.from_tuned(cfg, plan_t.params, doc, plan=plan_t)
+        eng_u = ServingEngine(cfg, plan_u.params, plan=plan_u,
+                              max_batch=res.uniform.batch,
+                              max_len=CONS.max_len)
+        tok_t, tok_u = _measure_ab(eng_t, eng_u, cfg.vocab,
+                                   reps=3 if smoke else 4, **mkw)
+        assert tok_t > tok_u, (
+            f"tuned plan measured {tok_t:.1f} tok/s, uniform {tok_u:.1f} — "
+            f"the autotuned plan must win on the engine tick loop")
+        emit(
+            "autotune/predicted_vs_measured", None,
+            f"predicted={res.prediction.tokens_per_s:.0f};"
+            f"uniform_predicted={res.uniform.tokens_per_s:.0f};"
+            f"measured={tok_t:.1f};uniform_measured={tok_u:.1f};"
+            f"measured_speedup={tok_t / tok_u:.3f}",
+        )
+
+        # deploy-path check: the same artifact serves through the CLI flag
+        out = io.StringIO()
+        with contextlib.redirect_stdout(out):
+            serve.main([
+                "--arch", ARCH, "--smoke", "--autotune-plan", art,
+                "--requests", "4", "--max-new", "4",
+                "--prompt-len", str(CONS.prompt_len),
+            ])
+        text = out.getvalue()
+        assert "autotune plan" in text and "completed 4 requests" in text, text
+        emit("autotune/serve_flag", None,
+             f"requests=4;served=True;artifact={os.path.basename(art)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    autotune_search,
     common,
     continuous_serving,
     decode_microbench,
@@ -60,6 +61,7 @@ ALL = {
     "speculative_serving": speculative_serving.main,
     "degraded_serving": degraded_serving.main,
     "continuous_serving": continuous_serving.main,
+    "autotune": autotune_search.main,
     "decode": decode_microbench.main,
 }
 

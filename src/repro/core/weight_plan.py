@@ -202,9 +202,14 @@ class PlanConfig:
     """How to compress a model for serving.
 
     default:   representation for every eligible matmul leaf.
-    rules:     ((path_substring, repr), ...) — first match overrides the
-               default (e.g. (("embed", "quant"), ("w_down", "dense"))).
-    q_prune:   block-pruned fraction for the sparse representations.
+    rules:     ((path_substring, repr[, q_prune]), ...) — first match
+               overrides the default (e.g. (("embed", "quant"),
+               ("w_down", "dense"))).  A 3-tuple additionally overrides the
+               plan-wide ``q_prune`` for the matched leaf, which is how the
+               offline autotuner (core/autotune) emits per-leaf sparsity:
+               (("w_up", "quant_sparse", 0.75), ("wo", "quant_sparse", 0.25)).
+    q_prune:   block-pruned fraction for the sparse representations (the
+               default when a matching rule carries no override).
     bk/bn:     block geometry (MXU-aligned 128x128 in production; smaller in
                tests so tiny configs have enough blocks to prune).
     min_size / min_contract: eligibility floor (same as quant serving: tiny
@@ -229,6 +234,13 @@ class PlanConfig:
             raise ValueError(f"default must be one of {REPRS}, got {self.default!r}")
         if not 0.0 <= self.q_prune < 1.0:
             raise ValueError(f"q_prune must be in [0, 1), got {self.q_prune}")
+        for r in self.rules:
+            if len(r) not in (2, 3):
+                raise ValueError(f"rule must be (sub, repr[, q_prune]), got {r!r}")
+            if r[1] not in REPRS:
+                raise ValueError(f"unknown representation {r[1]!r} in rule {r!r}")
+            if len(r) == 3 and r[2] is not None and not 0.0 <= r[2] < 1.0:
+                raise ValueError(f"rule q_prune must be in [0, 1), got {r!r}")
 
     @property
     def block(self) -> BlockPruneConfig:
@@ -271,15 +283,19 @@ def _sparse_eligible(name: str, leaf, cfg: PlanConfig) -> bool:
     return K % cfg.bk == 0 and N % cfg.bn == 0 and K // cfg.bk >= 1 and N // cfg.bn >= 1
 
 
-def assign_repr(path, leaf, cfg: PlanConfig) -> str:
-    """Representation for one leaf: rules override the default; ineligible
-    leaves degrade gracefully (quant_sparse -> quant -> dense)."""
+def assign_leaf(path, leaf, cfg: PlanConfig) -> tuple:
+    """(representation, q_prune) for one leaf: rules override the default
+    (and, for 3-tuple rules, the plan-wide q_prune); ineligible leaves
+    degrade gracefully (quant_sparse -> quant -> dense).  q_prune is 0 for
+    the non-sparse representations — they stream every weight."""
     name = leaf_name(path)
     ps = path_str(path)
-    kind = cfg.default
-    for sub, k in cfg.rules:
-        if sub in ps:
-            kind = k
+    kind, q = cfg.default, cfg.q_prune
+    for rule in cfg.rules:
+        if rule[0] in ps:
+            kind = rule[1]
+            if len(rule) == 3 and rule[2] is not None:
+                q = float(rule[2])
             break
     if kind not in REPRS:
         raise ValueError(f"unknown representation {kind!r} for {ps}")
@@ -287,7 +303,14 @@ def assign_repr(path, leaf, cfg: PlanConfig) -> str:
         kind = "quant" if kind == "quant_sparse" else "dense"
     if kind == "quant" and not _quant_eligible(name, leaf, cfg):
         kind = "dense"
-    return kind
+    if kind not in ("block_sparse", "quant_sparse"):
+        q = 0.0
+    return kind, q
+
+
+def assign_repr(path, leaf, cfg: PlanConfig) -> str:
+    """Representation for one leaf (``assign_leaf`` without the q_prune)."""
+    return assign_leaf(path, leaf, cfg)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -539,19 +562,38 @@ class WeightPlan:
         kv_bytes_per_token: float = 0.0,
         context_len: int = 0,
         batch: Optional[int] = None,
+        per_leaf: bool = False,
     ) -> str:
         """One coherent traffic budget, in the bytes/token units the sizer
         consumes: the weight stream is charged once per decode step and
         amortized over the batch; the KV stream is charged per live token.
         ``batch`` defaults to the plan-corrected n_opt so the logged budget
         matches what ``sizer().step_time`` would charge at the balance
-        point."""
+        point.
+
+        Each kind's aggregate carries its q_prune range so a non-uniform
+        (autotuned) plan is inspectable at a glance; ``per_leaf=True``
+        appends one provenance line per leaf — the full kind + q_prune
+        assignment a loaded plan cache would otherwise hide."""
         by_kind: dict = {}
         for l in self.leaves.values():
-            agg = by_kind.setdefault(l.kind, [0, 0.0])
+            agg = by_kind.setdefault(l.kind, [0, 0.0, 1.0, 0.0])
             agg[0] += 1
             agg[1] += l.bytes
-        parts = [f"{k}:{n} ({b/1e6:.2f} MB)" for k, (n, b) in sorted(by_kind.items())]
+            agg[2] = min(agg[2], l.q_prune)
+            agg[3] = max(agg[3], l.q_prune)
+
+        def _q_label(lo: float, hi: float) -> str:
+            if hi <= 0.0:
+                return ""
+            if hi - lo < 5e-3:
+                return f" q={hi:.2f}"
+            return f" q={lo:.2f}..{hi:.2f}"
+
+        parts = [
+            f"{k}:{n} ({b/1e6:.2f} MB{_q_label(lo, hi)})"
+            for k, (n, b, lo, hi) in sorted(by_kind.items())
+        ]
         from repro.core.batching import UNBOUNDED_NOPT
 
         n = batch or self.sizer(
@@ -562,7 +604,7 @@ class WeightPlan:
         n_label = "inf" if (batch is None and n >= UNBOUNDED_NOPT) else str(n)
         w_tok = self.weight_bytes / max(1, n)
         kv_tok = kv_bytes_per_token * context_len
-        return (
+        s = (
             f"plan[{', '.join(parts)}] "
             f"q_prune={self.q_prune_effective:.3f} "
             f"b_weight={self.b_weight_effective:.2f} "
@@ -572,6 +614,13 @@ class WeightPlan:
             f"bytes/tok@n={n_label}: weights={w_tok:.0f} kv={kv_tok:.0f} "
             f"total={w_tok + kv_tok:.0f}"
         )
+        if per_leaf:
+            s += "\n" + "\n".join(
+                f"  {p}: {l.kind} q={l.q_prune:.2f} "
+                f"{l.bytes/1e3:.1f} kB ({l.shape})"
+                for p, l in sorted(self.leaves.items())
+            )
+        return s
 
 
 def _leaf_stats(path: str, kind: str, leaf, packed, axes: tuple = ()) -> LeafPlan:
@@ -749,13 +798,14 @@ def compress(params, cfg: PlanConfig = PlanConfig(), *, axes=None) -> WeightPlan
         if not hasattr(leaf, "ndim"):
             return leaf
         ps = path_str(path)
-        kind = assign_repr(path, leaf, cfg)
+        kind, q = assign_leaf(path, leaf, cfg)
         if kind == "dense":
             packed = leaf
         elif kind == "quant":
             packed = quantize_leaf(leaf)
         else:
-            packed = pack_block_sparse(leaf, cfg, quant=(kind == "quant_sparse"))
+            pc = cfg if q == cfg.q_prune else dataclasses.replace(cfg, q_prune=q)
+            packed = pack_block_sparse(leaf, pc, quant=(kind == "quant_sparse"))
         leaves[ps] = _leaf_stats(
             ps, kind, leaf, packed, axes=tuple(ax) if ax else ())
         by_path[ps] = packed

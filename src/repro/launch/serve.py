@@ -31,6 +31,7 @@ import jax
 import numpy as np
 
 import repro.configs as C
+from repro.core import autotune as AT
 from repro.core.batching import UNBOUNDED_NOPT, BatchSizer, mean_decode_context
 from repro.core.perf_model import paged_pool_pages
 from repro.core.weight_plan import PlanConfig, load_plan, save_plan
@@ -132,6 +133,11 @@ def main(argv=None):
     ap.add_argument("--plan-cache", default=None, metavar="DIR",
                     help="persist/restore the packed plan so engines boot "
                          "from packed weights instead of re-packing")
+    ap.add_argument("--autotune-plan", default=None, metavar="PATH",
+                    help="serve a TunedPlan artifact (tools/autotune.py): "
+                         "its per-leaf plan rules and serving knobs (kv "
+                         "dtype, page geometry, max batch/len) override the "
+                         "corresponding flags; incompatible with --compress")
     ap.add_argument("--mesh", default="none", metavar="SPEC",
                     help="shard the serving plan over a device mesh via the "
                          "axis-rules registry: 'none' (default), 'host' "
@@ -182,6 +188,30 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = C.get_config(args.arch, smoke=args.smoke)
+    tuned = None
+    if args.autotune_plan:
+        if args.compress != "none":
+            ap.error("--autotune-plan carries its own plan; drop --compress")
+        tuned = AT.load_tuned(args.autotune_plan)
+        if tuned["arch"] != cfg.name:
+            ap.error(f"--autotune-plan was searched for {tuned['arch']!r}, "
+                     f"this run serves {cfg.name!r}")
+        # the artifact owns the knobs the search optimized over; flags it
+        # does not cover (spec decode needs --draft-config) stay CLI-set
+        s = tuned["serving"]
+        args.kv_dtype = s.get("kv_dtype", args.kv_dtype)
+        args.page_size = int(s.get("page_size") or 0)
+        args.pool_pages = int(s.get("num_pages") or 0)
+        args.max_batch = int(s.get("max_batch") or args.max_batch)
+        args.max_len = int(s.get("max_len") or args.max_len)
+        pr = tuned.get("predicted", {})
+        print(f"[serve] autotune plan {args.autotune_plan}: "
+              f"strategy={tuned['strategy']} trials={tuned['trials']} "
+              f"seed={tuned['seed']}; predicted "
+              f"{pr.get('tokens_per_s') or 0:.0f} tok/s "
+              f"({pr.get('speedup') or 1:.2f}x uniform), accuracy budget "
+              f"{tuned['accuracy']['budget']:.1%} at max "
+              f"q={tuned['accuracy']['max_q']:.2f}")
     api = get_api(cfg)
     params = api.init_params(cfg, jax.random.key(args.seed))
     kv_dtype = "int8" if args.kv_dtype == "int8" else None
@@ -232,7 +262,11 @@ def main(argv=None):
           + f" (TPU v5e constants, kv={kv_tok:.0f} B/tok @ ctx {ctx})")
 
     plan = None
-    if args.compress != "none":
+    if tuned is not None:
+        plan = _build_plan(api, cfg, params, AT.plan_config(tuned),
+                           args.plan_cache)
+        params = plan.params
+    elif args.compress != "none":
         plan = _build_plan(api, cfg, params, PlanConfig(
             default=args.compress, q_prune=args.q_prune,
             bk=args.block, bn=args.block,
@@ -301,7 +335,10 @@ def main(argv=None):
     if plan is not None:
         # one coherent traffic budget, in the bytes/token units the sizer
         # charges at this engine's actual batch
-        print(f"[serve] {plan.summary(kv_bytes_per_token=kv_tok, context_len=args.max_len, batch=engine.max_batch)}")
+        # a tuned plan gets the per-leaf provenance block: the kind +
+        # q_prune assignment the search picked, inspectable without
+        # re-running it
+        print(f"[serve] {plan.summary(kv_bytes_per_token=kv_tok, context_len=args.max_len, batch=engine.max_batch, per_leaf=tuned is not None)}")
         n_corr = plan.sizer(n_params=api.n_params_exact(cfg),
                             kv_bytes_per_token=kv_tok,
                             context_len=args.max_len,

@@ -623,6 +623,31 @@ class ServingEngine:
                         mesh=self.mesh, rules=self.rules))
         self._build_steps()
 
+    @classmethod
+    def from_tuned(cls, cfg, params, tuned: dict, *, plan=None, **overrides):
+        """Build an engine from a TunedPlan artifact (core/autotune).
+
+        The artifact's serving knobs (kv_dtype, page geometry, max_batch,
+        expected context, spec_k) become constructor kwargs; ``overrides``
+        win over the artifact.  ``plan`` is the compressed WeightPlan the
+        artifact's PlanConfig materializes (``autotune.plan_config(tuned)``
+        + ``api.compress`` or a ``load_plan`` cache) — pass it so the sizer
+        charges the tuned weight stream.  spec_k is honored only when a
+        draft model is supplied alongside, since the artifact cannot carry
+        draft params.
+        """
+        from repro.core import autotune as AT
+
+        if tuned.get("arch") != cfg.name:
+            raise ValueError(
+                f"TunedPlan was searched for arch {tuned.get('arch')!r}, "
+                f"engine config is {cfg.name!r}")
+        kw = AT.engine_kwargs(tuned)
+        if "draft_cfg" not in overrides:
+            kw.pop("spec_k", None)
+        kw.update(overrides)
+        return cls(cfg, params, plan=plan, **kw)
+
     def _build_steps(self):
         """(Re)create the jitted step wrappers.  Called once at init and
         again by the degradation ladder — a fresh ``jax.jit`` cache is what

@@ -1,0 +1,286 @@
+"""Offline plan autotuner (core/autotune): analytic screening parity with
+the real packer, constraint feasibility, lazy accuracy gating, search
+determinism, and the TunedPlan artifact path into the serving engine.
+
+The fast tests drive the search with a call-counting stub oracle; the real
+``CalibrationEvaluator`` (which trains the calibration net) runs under the
+``slow`` marker.
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import autotune as AT
+from repro.core import weight_plan as WP
+from repro.models.api import get_api
+from repro.serving.engine import Request, ServingEngine
+
+TINY = ModelConfig(
+    name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab=256, compute_dtype="float32",
+)
+
+SPACE = AT.SearchSpace(
+    q_prunes=(0.0, 0.25, 0.5),
+    kinds=("quant_sparse", "block_sparse", "quant", "dense"),
+    blocks=(16,),
+    kv_dtypes=("fp",),
+    page_sizes=(0,),
+    min_size=1024,
+    min_contract=16,
+)
+
+CONS = AT.Constraints(
+    max_batch=8, max_len=48, prompt_len=8, max_new=16,
+    pool_bytes=64e6, peak_flops=3.3e11, hbm_bw=1e11,
+)
+
+
+class CountingOracle:
+    """Accuracy stub: q <= ceiling passes; counts distinct consultations."""
+
+    def __init__(self, ceiling: float):
+        self.ceiling = ceiling
+        self.calls: list[float] = []
+        self.evals: list[dict] = []
+
+    def feasible(self, q: float) -> bool:
+        self.calls.append(q)
+        ok = q <= self.ceiling + 1e-12
+        self.evals.append({"q": q, "achieved_q": q if ok else 0.0,
+                           "base_acc": 0.9, "acc": 0.9 if ok else 0.5,
+                           "drop": 0.0 if ok else 0.4, "ok": ok})
+        return ok
+
+
+def _random_candidates(n, seed=0):
+    rng = np.random.default_rng(seed)
+    groups = AT.tunable_groups(TINY, SPACE)
+    return [AT._random_candidate(groups, SPACE, rng) for _ in range(n)]
+
+
+class TestPredictedStats:
+    def test_parity_with_real_packer(self):
+        """predict_plan_stats (shape arithmetic) must agree field-for-field
+        with what compress() measures on real weights, for a spread of
+        random candidates — the screen's objective is only trustworthy if
+        its byte accounting is the packer's."""
+        api = get_api(TINY)
+        params = api.init_params(TINY, jax.random.key(0))
+        leaves = AT.model_leaves(TINY)
+        for cand in _random_candidates(6):
+            want = AT.predict_plan_stats(leaves, cand, SPACE)
+            plan = api.compress(TINY, params,
+                               AT.candidate_plan_config(cand, SPACE))
+            assert want.n_weights == plan.n_weights, cand
+            assert want.surviving == plan.surviving_weights, cand
+            assert want.weight_bytes == pytest.approx(plan.weight_bytes), cand
+            assert want.b_weight_effective == pytest.approx(
+                plan.b_weight_effective), cand
+            assert want.q_overhead_effective == pytest.approx(
+                plan.q_overhead_effective), cand
+
+    def test_uniform_candidate_covers_all_tunable_groups(self):
+        cand = AT.uniform_candidate(TINY, SPACE)
+        names = [g for g, _, _ in cand.assign]
+        assert names == sorted(AT.tunable_groups(TINY, SPACE))
+        for _, kind, q in cand.assign:
+            assert kind == SPACE.kinds[0]
+            assert q == SPACE.q_prunes[0]
+
+    def test_degradation_chain_matches_assign_leaf(self):
+        """A kind the leaf is ineligible for must degrade identically in
+        the analytic stats and the packer (quant_sparse->quant->dense)."""
+        space = dataclasses.replace(SPACE, blocks=(48,))  # 48 ∤ shapes
+        cand = dataclasses.replace(
+            AT.uniform_candidate(TINY, space), block=48)
+        api = get_api(TINY)
+        params = api.init_params(TINY, jax.random.key(1))
+        want = AT.predict_plan_stats(AT.model_leaves(TINY), cand, space)
+        plan = api.compress(TINY, params,
+                           AT.candidate_plan_config(cand, space))
+        assert want.surviving == plan.surviving_weights
+        assert want.weight_bytes == pytest.approx(plan.weight_bytes)
+        assert all(l.kind in ("quant", "dense")
+                   for l in plan.leaves.values())
+
+
+class TestFeasibility:
+    def test_kv_pool_ceiling(self):
+        cons = dataclasses.replace(CONS, pool_bytes=1.0)
+        pred = AT.predict(TINY, AT.uniform_candidate(TINY, SPACE), SPACE, cons)
+        assert not pred.feasible
+        assert pred.reason == "kv-pool"
+
+    def test_vmem_ceiling(self):
+        cons = dataclasses.replace(CONS, vmem_bytes=16.0)
+        cand = AT.uniform_candidate(TINY, SPACE)  # quant_sparse everywhere
+        pred = AT.predict(TINY, cand, SPACE, cons)
+        assert not pred.feasible
+        assert pred.reason == "vmem"
+
+    def test_feasible_balance_is_exact(self):
+        pred = AT.predict(TINY, AT.uniform_candidate(TINY, SPACE), SPACE, CONS)
+        assert pred.feasible
+        assert pred.tokens_per_s > 0
+        assert pred.balance == pytest.approx(1.0, abs=1e-9)
+
+    def test_search_raises_when_nothing_feasible(self):
+        cons = dataclasses.replace(CONS, pool_bytes=1.0)
+        with pytest.raises(ValueError, match="feasible"):
+            AT.search(TINY, space=SPACE, constraints=cons, trials=3, seed=0)
+
+
+class TestSearch:
+    @pytest.mark.parametrize("strategy", ["random", "anneal"])
+    def test_deterministic_and_seeded_by_uniform(self, strategy):
+        kw = dict(space=SPACE, constraints=CONS, strategy=strategy,
+                  trials=8, seed=3)
+        a = AT.search(TINY, **kw)
+        b = AT.search(TINY, **kw)
+        assert a.trace == b.trace
+        assert a.best == b.best
+        # trial 0 is always the uniform default, so the winner can't lose
+        assert a.trace[0]["trial"] == 0
+        assert a.prediction.tokens_per_s >= a.uniform.tokens_per_s
+
+    def test_seeds_diverge(self):
+        kw = dict(space=SPACE, constraints=CONS, strategy="random", trials=8)
+        a = AT.search(TINY, seed=0, **kw)
+        b = AT.search(TINY, seed=1, **kw)
+        assert a.trace != b.trace  # same knobs, different walk
+
+    def test_accuracy_gate_is_lazy_and_monotone(self):
+        """The oracle runs only for frontier candidates, each q at most
+        once, and a failed q lowers the ceiling so costlier qs are never
+        consulted (screening-vs-evaluation split from the ISSUE)."""
+        oracle = CountingOracle(ceiling=0.25)
+        res = AT.search(TINY, space=SPACE, constraints=CONS,
+                        strategy="random", trials=16, seed=0,
+                        accuracy=oracle)
+        assert len(oracle.calls) <= 2  # distinct nonzero qs in SPACE
+        assert len(oracle.calls) == len(set(oracle.calls))
+        assert res.prediction.stats.max_q <= 0.25 + 1e-12
+        # evals surface in the result for the artifact's provenance block
+        assert res.acc_evals == tuple(oracle.evals)
+
+    def test_accuracy_gate_blocks_all_pruning(self):
+        oracle = CountingOracle(ceiling=-1.0)  # nothing passes
+        res = AT.search(TINY, space=SPACE, constraints=CONS,
+                        strategy="anneal", trials=12, seed=0,
+                        accuracy=oracle)
+        assert res.prediction.stats.max_q == 0.0
+
+
+class TestArtifact:
+    def _result(self):
+        return AT.search(TINY, space=SPACE, constraints=CONS,
+                         strategy="anneal", trials=8, seed=0)
+
+    def test_round_trip_and_plan_config(self, tmp_path):
+        res = self._result()
+        doc = AT.tuned_plan_doc(TINY, res, space=SPACE, constraints=CONS)
+        path = os.path.join(tmp_path, "tuned.json")
+        AT.save_tuned(path, doc)
+        loaded = AT.load_tuned(path)
+        assert loaded == json.loads(json.dumps(doc))  # JSON-stable
+        pc = AT.plan_config(loaded)
+        assert pc == AT.candidate_plan_config(res.best, SPACE)
+        kw = AT.engine_kwargs(loaded)
+        assert kw["max_batch"] == res.prediction.batch
+        assert "kv_dtype" not in kw  # fp-only space
+
+    def test_load_tuned_rejects_rot(self, tmp_path):
+        res = self._result()
+        doc = AT.tuned_plan_doc(TINY, res, space=SPACE, constraints=CONS)
+        for breakage in ({"kind": "weight_plan"},
+                         {"schema_version": 99}):
+            bad = os.path.join(tmp_path, "bad.json")
+            AT.save_tuned(bad, {**doc, **breakage})
+            with pytest.raises(ValueError):
+                AT.load_tuned(bad)
+        incomplete = {k: v for k, v in doc.items() if k != "serving"}
+        bad = os.path.join(tmp_path, "bad2.json")
+        with open(bad, "w") as f:
+            json.dump(incomplete, f)
+        with pytest.raises(ValueError, match="serving"):
+            AT.load_tuned(bad)
+
+    def test_predicted_block_records_speedup(self):
+        res = self._result()
+        doc = AT.tuned_plan_doc(TINY, res, space=SPACE, constraints=CONS)
+        p = doc["predicted"]
+        assert p["speedup"] == pytest.approx(
+            p["tokens_per_s"] / p["uniform_tokens_per_s"])
+        assert doc["measured"]["tokens_per_s"] is None  # bench fills this
+        assert len(doc["trace"]) == len(res.trace)
+
+
+class TestEngineIntegration:
+    def _doc_and_plan(self):
+        res = AT.search(TINY, space=SPACE, constraints=CONS,
+                        strategy="anneal", trials=8, seed=0)
+        doc = AT.tuned_plan_doc(TINY, res, space=SPACE, constraints=CONS)
+        api = get_api(TINY)
+        params = api.init_params(TINY, jax.random.key(0))
+        plan = api.compress(TINY, params, AT.plan_config(doc))
+        return doc, plan
+
+    def test_from_tuned_serves_the_artifact(self):
+        doc, plan = self._doc_and_plan()
+        eng = ServingEngine.from_tuned(TINY, plan.params, doc, plan=plan)
+        assert eng.max_batch == doc["serving"]["max_batch"]
+        rng = np.random.default_rng(0)
+        for uid in range(3):
+            eng.submit(Request(
+                uid=uid,
+                prompt=rng.integers(0, TINY.vocab, size=4).astype(np.int32),
+                max_new_tokens=4))
+        stats = eng.run_until_done()
+        assert stats.completed == 3
+
+    def test_from_tuned_rejects_arch_mismatch(self):
+        doc, plan = self._doc_and_plan()
+        other = dataclasses.replace(TINY, name="tiny-other")
+        with pytest.raises(ValueError, match="arch"):
+            ServingEngine.from_tuned(other, plan.params, doc, plan=plan)
+
+
+@pytest.mark.slow
+class TestCalibrationEvaluator:
+    def test_budget_enforced_and_memoized(self):
+        ev = AT.CalibrationEvaluator(AT.CalibrationConfig.smoke(),
+                                     max_acc_drop=0.015)
+        assert ev.feasible(0.0)  # trivially within budget, no training
+        assert ev.n_evals == 0
+        ok = ev.feasible(0.25)
+        assert ev.n_evals == 1
+        assert ev.feasible(0.25) is ok  # memoized: no second prune run
+        assert ev.n_evals == 1
+        e = ev.evals[0]
+        assert e["ok"] is ok
+        if ok:
+            assert e["drop"] <= 0.015 + 1e-9
+
+    def test_cli_writes_loadable_artifact(self, tmp_path):
+        import tools.autotune as cli
+
+        out = os.path.join(tmp_path, "tuned.json")
+        rc = cli.main([
+            "--arch", "tinyllama-1.1b", "--smoke", "--out", out,
+            "--strategy", "anneal", "--trials", "6", "--seed", "0",
+            "--kv-dtypes", "fp", "--page-sizes", "0", "--blocks", "16",
+            "--min-size", "1024", "--min-contract", "16",
+            "--calib-smoke", "--max-batch", "8", "--max-len", "48",
+            "--prompt-len", "8", "--max-new", "16",
+        ])
+        assert rc == 0
+        doc = AT.load_tuned(out)
+        assert doc["arch"] == "tinyllama-smoke"
+        assert doc["predicted"]["tokens_per_s"] > 0

@@ -129,3 +129,47 @@ class TestModelInvariants:
         lo = pm.decode_step_time(int(1e9), batch=1)
         hi = pm.decode_step_time(int(1e9), batch=4096)
         assert lo["bound"] == "memory" and hi["bound"] == "compute"
+
+
+class TestDecodeMonotonicity:
+    """Autotuner-load-bearing monotonicity: the search ranks candidates by
+    modeled tokens/s = batch / t_proc, so t_proc must move the right way
+    with the plan's compression stats or the objective is garbage."""
+
+    KW = dict(n_params=int(1e9), kv_bytes_per_token=1e5, context_len=512)
+
+    @given(q1=st.floats(1.0, 4.0), q2=st.floats(1.0, 4.0),
+           batch=st.integers(1, 512))
+    @settings(max_examples=40, deadline=None)
+    def test_tokens_per_s_non_increasing_in_q_overhead(self, q1, q2, batch):
+        # t_calc is q_overhead-free; t_mem streams q_overhead * payload ->
+        # t_proc = max(...) is non-decreasing, tokens/s non-increasing
+        lo, hi = sorted((q1, q2))
+        t_lo = pm.decode_step_time(batch=batch, q_overhead=lo, **self.KW)
+        t_hi = pm.decode_step_time(batch=batch, q_overhead=hi, **self.KW)
+        assert t_hi["t_proc"] >= t_lo["t_proc"]
+        assert batch / t_hi["t_proc"] <= batch / t_lo["t_proc"]
+
+    @given(q1=st.floats(0.0, 0.95), q2=st.floats(0.0, 0.95),
+           batch=st.integers(1, 512))
+    @settings(max_examples=40, deadline=None)
+    def test_tokens_per_s_non_decreasing_in_q_prune(self, q1, q2, batch):
+        # with sparse_compute both terms carry (1 - q_prune): more pruning
+        # can only help at fixed batch
+        lo, hi = sorted((q1, q2))
+        t_lo = pm.decode_step_time(batch=batch, q_prune=lo,
+                                   sparse_compute=True, **self.KW)
+        t_hi = pm.decode_step_time(batch=batch, q_prune=hi,
+                                   sparse_compute=True, **self.KW)
+        assert t_hi["t_proc"] <= t_lo["t_proc"]
+
+    @given(b_weight=st.floats(0.5, 4.0), q_prune=st.floats(0.0, 0.9),
+           kv=st.floats(1e3, 1e6))
+    @settings(max_examples=40, deadline=None)
+    def test_spec_nopt_degenerates_to_decode_nopt_at_k0(self, b_weight,
+                                                        q_prune, kv):
+        # k = 0 means one committed token per step: the speculative balance
+        # point must collapse to the plain decode one exactly
+        kw = dict(b_weight=b_weight, q_prune=q_prune, n_params=int(1e9),
+                  kv_bytes_per_token=kv, context_len=256)
+        assert pm.spec_decode_n_opt(0, **kw) == pm.decode_n_opt(**kw)

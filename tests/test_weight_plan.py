@@ -136,6 +136,49 @@ class TestPlanAssignment:
         assert plan.leaves["a/w_x"].kind == "dense"
         assert plan.leaves["b/w_x"].kind == "quant_sparse"
 
+    def test_three_tuple_rule_sets_per_leaf_q(self):
+        """The autotuner emits (sub, repr, q_prune) rules: the matched leaf
+        prunes at the rule's q, everything else at the plan-wide q."""
+        rng = np.random.default_rng(0)
+        params = {
+            "a": {"w_x": jnp.asarray(rng.normal(size=(64, 96)), jnp.float32)},
+            "b": {"w_x": jnp.asarray(rng.normal(size=(64, 96)), jnp.float32)},
+        }
+        pc = dataclasses.replace(
+            PC, q_prune=0.25, min_size=64,
+            rules=(("a/", "quant_sparse", 0.5), ("b/", "block_sparse", None)))
+        plan = WP.compress(params, pc)
+        assert plan.leaves["a/w_x"].q_prune == pytest.approx(0.5)
+        assert plan.leaves["b/w_x"].kind == "block_sparse"
+        assert plan.leaves["b/w_x"].q_prune == pytest.approx(0.25)  # None -> plan q
+
+    def test_rule_validation(self):
+        for rules in ((("a/",),), (("a/", "nope"),), (("a/", "dense", 1.5),)):
+            with pytest.raises(ValueError):
+                dataclasses.replace(PC, rules=rules)
+
+    def test_summary_reports_q_provenance_and_round_trips(self, tmp_path):
+        """summary() must carry each kind's q range (a tuned plan is
+        unreadable without it) and survive save_plan/load_plan with
+        3-tuple rules byte-for-byte."""
+        rng = np.random.default_rng(1)
+        params = {
+            "a": {"w_x": jnp.asarray(rng.normal(size=(64, 96)), jnp.float32)},
+            "b": {"w_x": jnp.asarray(rng.normal(size=(64, 96)), jnp.float32)},
+        }
+        pc = dataclasses.replace(
+            PC, q_prune=0.0, min_size=64,
+            rules=(("a/", "quant_sparse", 0.5), ("b/", "quant_sparse", 0.25)))
+        plan = WP.compress(params, pc)
+        s = plan.summary(per_leaf=True)
+        assert "q=0.25..0.5" in s  # aggregated range for quant_sparse
+        assert "a/w_x: quant_sparse q=0.50" in s
+        assert "b/w_x: quant_sparse q=0.25" in s
+        WP.save_plan(str(tmp_path / "plan"), plan)
+        restored = WP.load_plan(str(tmp_path / "plan"), params)
+        assert restored.cfg == plan.cfg  # 3-tuple rules survive JSON
+        assert restored.summary(per_leaf=True) == s
+
     def test_plan_apply_linear_by_path(self):
         rng = np.random.default_rng(0)
         w = jnp.asarray(rng.normal(size=(64, 96)), jnp.float32)

@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Offline plan autotuner CLI — search the compression/serving design space.
+
+    PYTHONPATH=src python tools/autotune.py --arch tinyllama-1.1b --smoke \
+        --strategy anneal --trials 64 --seed 0 --out /tmp/tuned.json
+
+Explores per-leaf (kind, q_prune) assignments plus block size, kv_dtype and
+page size with objective = modeled tokens/s (core/perf_model roofline) and
+constraint = the paper's 1.5% accuracy-drop budget, evaluated lazily with
+``pruning.iterative_prune`` on a seeded calibration task (core/autotune).
+Writes a TunedPlan JSON artifact that ``serve.py --autotune-plan`` loads
+directly; ``--plan-cache DIR`` additionally packs the winning weights
+through ``weight_plan.save_plan`` so serving boots skip the pack step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _floats(s: str) -> tuple:
+    return tuple(float(v) for v in s.split(",") if v != "")
+
+
+def _ints(s: str) -> tuple:
+    return tuple(int(v) for v in s.split(",") if v != "")
+
+
+def _strs(s: str) -> tuple:
+    return tuple(v for v in s.split(",") if v != "")
+
+
+def main(argv=None):
+    import repro.configs as C
+    from repro.core import autotune as AT
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--arch", required=True, choices=C.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", required=True, metavar="PATH",
+                    help="TunedPlan JSON artifact to write")
+    ap.add_argument("--strategy", default="anneal",
+                    choices=("anneal", "random"))
+    ap.add_argument("--trials", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    # design space (first value of each list = the uniform default)
+    ap.add_argument("--q-prunes", type=_floats, default=(0.0, 0.25, 0.5, 0.75),
+                    metavar="Q,Q,...", help="sparsity levels (default first)")
+    ap.add_argument("--kinds", type=_strs,
+                    default=("quant_sparse", "block_sparse", "quant", "dense"),
+                    metavar="K,K,...", help="representations (default first)")
+    ap.add_argument("--blocks", type=_ints, default=(128,), metavar="B,B,...",
+                    help="sparse block edges bk=bn (default first)")
+    ap.add_argument("--kv-dtypes", type=_strs, default=("fp", "int8"),
+                    metavar="D,D,...")
+    ap.add_argument("--page-sizes", type=_ints, default=(0, 16),
+                    metavar="P,P,...", help="0 = contiguous KV cache")
+    ap.add_argument("--min-size", type=int, default=16384)
+    ap.add_argument("--min-contract", type=int, default=64)
+    # constraints / workload
+    ap.add_argument("--budget", type=float, default=0.015,
+                    help="accuracy-drop budget (paper Section 6.4)")
+    ap.add_argument("--no-accuracy", action="store_true",
+                    help="skip the calibration oracle (perf screening only)")
+    ap.add_argument("--calib-smoke", action="store_true",
+                    help="tiny calibration task (CI-scale oracle)")
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=64)
+    ap.add_argument("--pool-gb", type=float, default=16.0,
+                    help="KV pool budget per chip (GB)")
+    ap.add_argument("--vmem-mb", type=float, default=16.0,
+                    help="Pallas kernel VMEM working-set ceiling (MB)")
+    ap.add_argument("--plan-cache", default=None, metavar="DIR",
+                    help="pack the winning plan and persist it via "
+                         "weight_plan.save_plan")
+    args = ap.parse_args(argv)
+
+    cfg = C.get_config(args.arch, smoke=args.smoke)
+    space = AT.SearchSpace(
+        q_prunes=args.q_prunes, kinds=args.kinds, blocks=args.blocks,
+        kv_dtypes=args.kv_dtypes, page_sizes=args.page_sizes,
+        min_size=args.min_size, min_contract=args.min_contract)
+    cons = AT.Constraints(
+        max_acc_drop=args.budget, pool_bytes=args.pool_gb * 1e9,
+        vmem_bytes=args.vmem_mb * 2**20, max_batch=args.max_batch,
+        max_len=args.max_len, prompt_len=args.prompt_len,
+        max_new=args.max_new)
+    accuracy = None
+    if not args.no_accuracy:
+        calib = (AT.CalibrationConfig.smoke() if args.calib_smoke
+                 else AT.CalibrationConfig())
+        accuracy = AT.CalibrationEvaluator(calib, max_acc_drop=args.budget)
+
+    t0 = time.time()
+    result = AT.search(
+        cfg, space=space, constraints=cons, strategy=args.strategy,
+        trials=args.trials, seed=args.seed, accuracy=accuracy)
+    dt = time.time() - t0
+    p, u = result.prediction, result.uniform
+    print(f"[autotune] {cfg.name}: {args.strategy} x{args.trials} "
+          f"(seed {args.seed}) in {dt:.1f}s; "
+          f"{len(result.acc_evals)} accuracy evals")
+    print(f"[autotune] best {p.tokens_per_s:.0f} tok/s @ batch {p.batch} "
+          f"(uniform {u.tokens_per_s:.0f}, "
+          f"{p.tokens_per_s / max(u.tokens_per_s, 1e-9):.2f}x); "
+          f"balance={p.balance:.2f} max_q={p.stats.max_q:.2f}")
+    for g, k, q in result.best.assign:
+        print(f"[autotune]   {g}: {k} q={q:.2f}")
+    print(f"[autotune]   block={result.best.block} "
+          f"kv={result.best.kv_dtype} page={result.best.page_size} "
+          f"spec_k={result.best.spec_k} mesh={result.best.mesh}")
+
+    doc = AT.tuned_plan_doc(cfg, result, space=space, constraints=cons)
+    AT.save_tuned(args.out, doc)
+    print(f"[autotune] wrote {args.out}")
+
+    if args.plan_cache:
+        import jax
+
+        from repro.core.weight_plan import save_plan
+        from repro.models.api import get_api
+
+        api = get_api(cfg)
+        params = api.init_params(cfg, jax.random.key(0))
+        plan = api.compress(cfg, params, AT.plan_config(doc))
+        save_plan(args.plan_cache, plan)
+        print(f"[autotune] packed plan cached to {args.plan_cache}")
+        print(f"[autotune] {plan.summary(per_leaf=True)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

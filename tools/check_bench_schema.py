@@ -24,6 +24,7 @@ gate schema rot before the benches execute.
 from __future__ import annotations
 
 import json
+import re
 import sys
 
 SCHEMA_VERSION = 1
@@ -34,6 +35,34 @@ ROW_FIELDS = {
     "us_per_call": (float, int, type(None)),
     "derived": (str,),
 }
+
+# autotune cells carry the search artifact through ``derived`` strings
+# (rows stay in the four-field shape above); these pins keep the
+# search-trace and predicted-vs-measured payloads diffable between PRs
+TRACE_RE = re.compile(r"^trial=\d+;.*\btok_s=")
+PVM_KEYS = ("predicted=", "uniform_predicted=", "measured=",
+            "uniform_measured=")
+
+
+def _validate_autotune_row(i: int, row: dict, errs: list[str]) -> None:
+    name, derived = row.get("name", ""), row.get("derived", "")
+    if not isinstance(name, str) or not isinstance(derived, str):
+        return  # already reported by the field-type loop
+    if not name.startswith("autotune/"):
+        errs.append(
+            f"rows[{i}]: autotune rows must be named autotune/*, "
+            f"got {name!r}")
+        return
+    if "/trace/" in name and not TRACE_RE.match(derived):
+        errs.append(
+            f"rows[{i}] ({name}): trace derived must match "
+            f"'trial=N;...tok_s=...', got {derived!r}")
+    if name.endswith("predicted_vs_measured"):
+        missing = [k for k in PVM_KEYS if k not in derived]
+        if missing:
+            errs.append(
+                f"rows[{i}] ({name}): derived missing {missing}, "
+                f"got {derived!r}")
 
 
 def validate(doc: object) -> list[str]:
@@ -70,6 +99,8 @@ def validate(doc: object) -> list[str]:
         extra = set(row) - set(ROW_FIELDS)
         if extra:
             errs.append(f"rows[{i}] has undocumented fields {sorted(extra)}")
+        if row.get("bench") == "autotune":
+            _validate_autotune_row(i, row, errs)
     return errs
 
 
@@ -82,6 +113,15 @@ GOLDEN = {
          "us_per_call": 12.5, "derived": "modeled=measured"},
         {"bench": "nopt", "name": "nopt/zynq", "us_per_call": None,
          "derived": "n_opt=12.66"},
+        {"bench": "autotune", "name": "autotune/trace/003",
+         "us_per_call": None,
+         "derived": "trial=3;tok_s=1435874;feasible=True;accepted=True;"
+                    "best_tok_s=1435874"},
+        {"bench": "autotune", "name": "autotune/predicted_vs_measured",
+         "us_per_call": None,
+         "derived": "predicted=1726808;uniform_predicted=1359730;"
+                    "measured=1019.8;uniform_measured=835.9;"
+                    "measured_speedup=1.220"},
     ],
 }
 
@@ -96,7 +136,11 @@ def selftest() -> int:
     rotted = json.loads(json.dumps(GOLDEN))
     rotted["rows"][0].pop("us_per_call")
     rotted["rows"][1]["extra"] = 1
-    if len(validate(rotted)) < 2:
+    rotted["rows"][2]["derived"] = "tok_s=1435874"  # lost the trial index
+    rotted["rows"][3]["derived"] = "predicted=1726808"  # lost measured side
+    rotted["rows"].append({"bench": "autotune", "name": "search",
+                           "us_per_call": None, "derived": ""})
+    if len(validate(rotted)) < 5:
         print("bench-schema: malformed document passed (validator rot?)")
         return 1
     print("bench-schema: selftest ok (golden accepted, rot rejected)")
