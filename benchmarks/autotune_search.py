@@ -44,6 +44,7 @@ from benchmarks.common import emit
 from repro.core import autotune as AT
 from repro.launch import serve
 from repro.models.api import get_api
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Request, ServingEngine
 
 ARCH = "tinyllama-1.1b"  # served as the smoke config: arch "tinyllama-smoke"
@@ -187,9 +188,8 @@ def main(smoke: bool = False):
         mkw = dict(n_req=6 * CONS.max_batch, prompt_len=CONS.prompt_len,
                    max_new=CONS.max_new, seed=0)
         eng_t = ServingEngine.from_tuned(cfg, plan_t.params, doc, plan=plan_t)
-        eng_u = ServingEngine(cfg, plan_u.params, plan=plan_u,
-                              max_batch=res.uniform.batch,
-                              max_len=CONS.max_len)
+        eng_u = ServingEngine(cfg, plan_u.params, plan=plan_u, config=EngineConfig.of(
+                max_batch=res.uniform.batch, max_len=CONS.max_len))
         tok_t, tok_u = _measure_ab(eng_t, eng_u, cfg.vocab,
                                    reps=3 if smoke else 4, **mkw)
         assert tok_t > tok_u, (

@@ -33,6 +33,7 @@ import jax
 import repro.configs as C
 from repro.core.batching import UNBOUNDED_NOPT, BatchSizer
 from repro.models.api import get_api, kv_bytes_per_token
+from repro.serving.config import EngineConfig
 from repro.serving.engine import ServingEngine
 from repro.serving.faultinject import TickClock
 from repro.serving.loadgen import (
@@ -75,7 +76,8 @@ def _run(cfg, params, arrivals, seed: int, chunked: bool):
               clock=TickClock(), seed=seed)
     if chunked:
         kw.update(prefill_chunk=CHUNK, prefill_budget=BUDGET)
-    eng = ServingEngine(cfg, params, **kw)
+    eng = ServingEngine(cfg, params, config=EngineConfig.of(
+            **kw))
     reqs = make_requests(arrivals, cfg.vocab, seed=seed)
     rep = run_open_loop(eng, arrivals, reqs, tick_dt=1.0)
     assert rep.all_terminal, rep.states

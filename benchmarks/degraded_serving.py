@@ -30,6 +30,7 @@ import numpy as np
 import repro.configs as C
 from repro.models import layers
 from repro.models.api import get_api
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.faultinject import Fault, FaultInjector
 
@@ -110,14 +111,16 @@ def main(smoke: bool = False) -> None:
     # snapshot and restore so later benches see the normal dispatch
     prev = layers.force_attention_kernel(None)
     try:
-        base = _run(ServingEngine(cfg, params, **kw),
+        base = _run(ServingEngine(cfg, params, config=EngineConfig.of(
+                **kw)),
                     _requests(n_req, cfg.vocab))
         emit("degraded_serving/fault_free", 1e6 / base["tps"],
              f"tok/s={base['tps']:.1f} p99_tick_ms={base['p99_ms']:.1f} "
              f"ticks={base['ticks']}")
 
         fi = FaultInjector(_schedule(n_req, spec))
-        eng = ServingEngine(cfg, params, fault_injector=fi, **kw)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                fault_injector=fi, **kw))
         faulted = _run(eng, _requests(n_req, cfg.vocab))
         st = faulted["stats"]
         emit("degraded_serving/faulted", 1e6 / faulted["tps"],

@@ -1,0 +1,168 @@
+"""Heterogeneous serving bench: one MixedServingEngine vs per-family solos.
+
+A seeded mixed trace (decoder-only text + whisper transcription + InternVL
+image-chat + an xLSTM recurrent stream) is served twice:
+
+  * **solo** — each family on its own ``ServingEngine``, back to back; the
+    sum of their run times gives the *traffic-weighted floor*
+    ``total_tokens / sum(solo_times)`` (the time-weighted blend of solo
+    rates — the arithmetic mean of rates is unattainable when the
+    families' steps interleave on one device, see
+    ``batching.MixedSizer.blended_floor``);
+  * **mixed** — ONE ``MixedServingEngine`` admits the whole trace through
+    per-family compiled steps and one shared page pool.
+
+Asserts the ISSUE-10 acceptance criteria:
+
+  * per-family greedy outputs are BIT-IDENTICAL between mixed and solo
+    (mixing families shares capacity, never state);
+  * mixed tokens/s >= 0.8x the traffic-weighted solo floor;
+  * the shared allocator audits clean after the run with zero pages live.
+"""
+
+from __future__ import annotations
+
+import time
+import warnings
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.models.api import get_api
+from repro.serving.config import CacheConfig, EngineConfig
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.mixed import MixedServingEngine, WorkloadSpec
+
+from benchmarks.common import emit
+
+# text + enc-dec + VLM + recurrent, text-heavy like real mixed traffic
+MIX = (("tinyllama-1.1b", 2.0), ("whisper-tiny", 1.0),
+       ("internvl2-2b", 1.0), ("xlstm-350m", 1.0))
+MAX_LEN = 64
+PAGE_SIZE = 8
+MAX_BATCH = 4
+PROMPT_LEN = 5
+MAX_NEW = 6
+
+
+def _engine_config() -> EngineConfig:
+    # one shared serving shape for every family; xLSTM falls back to its
+    # contiguous cache (no positionally-addressed cache to page)
+    return EngineConfig(
+        max_len=MAX_LEN, max_batch=MAX_BATCH, seed=0,
+        cache=CacheConfig(page_size=PAGE_SIZE,
+                          expected_context=PROMPT_LEN + MAX_NEW))
+
+
+def _requests(cfg, api, n: int, seed: int, uid0: int):
+    """Seeded per-family trace; called twice with the same seed so the solo
+    and mixed runs serve byte-identical prompts and extras."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        prompt = rng.integers(1, cfg.vocab,
+                              size=PROMPT_LEN + (i % 3)).astype(np.int32)
+        extras = {}
+        if "patches" in api.extra_keys:
+            extras["patches"] = rng.normal(
+                size=(cfg.n_patches, cfg.d_model)).astype(np.float32)
+        if "frames" in api.extra_keys:
+            extras["frames"] = rng.normal(
+                size=(cfg.n_frames, cfg.d_model)).astype(np.float32)
+        out.append(Request(uid=uid0 + i, prompt=prompt,
+                           max_new_tokens=MAX_NEW, extras=extras or None))
+    return out
+
+
+def _drain(submit, step, busy, reqs) -> float:
+    """Submit ``reqs`` and run to completion; returns wall seconds."""
+    t0 = time.perf_counter()
+    for r in reqs:
+        submit(r)
+    for _ in range(10000):
+        if not busy():
+            break
+        step()
+    return time.perf_counter() - t0
+
+
+def main(smoke: bool = False) -> None:
+    per = 2 if smoke else 4  # requests per traffic-weight unit
+    warnings.filterwarnings(
+        "ignore", message=".*does not thread a page table.*")
+    total_w = sum(w for _, w in MIX)
+    families = []
+    for fi, (arch, weight) in enumerate(MIX):
+        cfg = C.get_config(arch, smoke=True)
+        api = get_api(cfg)
+        params = api.init_params(cfg, jax.random.key(fi))
+        n = max(1, round(per * weight))
+        families.append(dict(arch=arch, weight=weight, cfg=cfg, api=api,
+                             params=params, n=n, seed=100 + fi,
+                             uid0=1000 * fi))
+
+    # -- solo: each family on its own engine, back to back -------------------
+    solo_time = 0.0
+    total_tokens = 0
+    solo_out = {}
+    for f in families:
+        eng = ServingEngine(f["cfg"], f["params"], config=_engine_config())
+        # warmup outside the timed window: tracing/compile is paid once per
+        # engine on BOTH sides of the comparison, so neither side's rate is
+        # a compile-time artifact
+        _drain(eng.submit, eng.step,
+               lambda e=eng: e.queue or e._live_slots(),
+               _requests(f["cfg"], f["api"], 1, seed=9, uid0=99990))
+        reqs = _requests(f["cfg"], f["api"], f["n"], f["seed"], f["uid0"])
+        solo_time += _drain(eng.submit, eng.step,
+                            lambda e=eng: e.queue or e._live_slots(), reqs)
+        eng.audit_pages()
+        assert all(r.done and r.error is None for r in reqs), f["arch"]
+        solo_out[f["arch"]] = [list(r.output) for r in reqs]
+        total_tokens += sum(len(o) for o in solo_out[f["arch"]])
+
+    # -- mixed: one engine, per-family steps, one shared page pool ------------
+    mixed = MixedServingEngine(
+        [WorkloadSpec(name=f["arch"], cfg=f["cfg"], params=f["params"],
+                      config=_engine_config(), weight=f["weight"])
+         for f in families])
+    for f in families:  # per-family warmup through the mixed front door
+        _drain(lambda r, a=f["arch"]: mixed.submit(a, r), mixed.step,
+               mixed._busy, _requests(f["cfg"], f["api"], 1, 9, 99990))
+    mixed_reqs = {f["arch"]: _requests(f["cfg"], f["api"], f["n"],
+                                       f["seed"], f["uid0"])
+                  for f in families}
+    flat = [(f["arch"], r) for f in families for r in mixed_reqs[f["arch"]]]
+    t0 = time.perf_counter()
+    for arch, r in flat:
+        mixed.submit(arch, r)
+    for _ in range(10000):
+        if not mixed._busy():
+            break
+        mixed.step()
+    mixed_time = time.perf_counter() - t0
+
+    # acceptance: bit-parity per family, clean audit, zero live pages
+    for f in families:
+        got = [list(r.output) for r in mixed_reqs[f["arch"]]]
+        assert got == solo_out[f["arch"]], (
+            f"{f['arch']}: mixed outputs diverge from solo")
+    mixed.audit_pages()
+    assert mixed.allocator.used_pages == 0, mixed.allocator.used_pages
+    mixed_tokens = sum(len(r.output) for _, r in flat)
+    assert mixed_tokens == total_tokens, (mixed_tokens, total_tokens)
+
+    floor = total_tokens / solo_time  # time-weighted blend of solo rates
+    mixed_tps = total_tokens / mixed_time
+    emit("mixed_serving/solo_floor", 1e6 / floor,
+         f"tok/s={floor:.1f} families={len(MIX)} tokens={total_tokens}")
+    emit(f"mixed_serving/mixed/w{total_w:g}", 1e6 / mixed_tps,
+         f"tok/s={mixed_tps:.1f} ratio={mixed_tps / floor:.2f} "
+         f"pool={mixed.num_pages}p parity=ok")
+    # the acceptance criterion: >= 0.8x the traffic-weighted solo floor
+    assert mixed_tps >= 0.8 * floor, (mixed_tps, floor)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ import numpy as np
 
 import repro.configs as C
 from repro.models.api import get_api
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Request, ServingEngine
 
 from benchmarks.common import emit
@@ -84,18 +85,18 @@ def main(smoke: bool = False) -> None:
 
     reqs = _requests(n_req, shared_prefix=False, vocab=cfg.vocab)
     cont = _run(
-        ServingEngine(cfg, params, max_len=MAX_LEN, max_batch=B0), reqs)
+        ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=MAX_LEN, max_batch=B0)), reqs)
     emit(f"paged_serving/contiguous/b{B0}", 1e6 / cont["tps"],
          f"tok/s={cont['tps']:.1f} peak_batch={cont['peak']} "
          f"pool_tok={pool_tokens}")
 
     reqs = _requests(n_req, shared_prefix=False, vocab=cfg.vocab)
     paged = _run(
-        ServingEngine(
-            cfg, params, max_len=MAX_LEN, max_batch=min(4 * B0, n_req),
-            page_size=PAGE_SIZE, num_pages=pool_pages,
-            expected_context=PROMPT_LEN + MAX_NEW,
-        ),
+        ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=MAX_LEN, max_batch=min(4 * B0, n_req),
+                page_size=PAGE_SIZE, num_pages=pool_pages,
+                expected_context=PROMPT_LEN + MAX_NEW)),
         reqs,
     )
     emit(f"paged_serving/paged/ps{PAGE_SIZE}", 1e6 / paged["tps"],
@@ -108,11 +109,10 @@ def main(smoke: bool = False) -> None:
     if not smoke:
         reqs = _requests(n_req, shared_prefix=True, vocab=cfg.vocab)
         shared = _run(
-            ServingEngine(
-                cfg, params, max_len=MAX_LEN, max_batch=min(4 * B0, n_req),
-                page_size=PAGE_SIZE, num_pages=pool_pages, share_prefix=True,
-                expected_context=PROMPT_LEN + MAX_NEW,
-            ),
+            ServingEngine(cfg, params, config=EngineConfig.of(
+                    max_len=MAX_LEN, max_batch=min(4 * B0, n_req),
+                    page_size=PAGE_SIZE, num_pages=pool_pages,
+                    share_prefix=True, expected_context=PROMPT_LEN + MAX_NEW)),
             reqs,
         )
         st = shared["stats"]

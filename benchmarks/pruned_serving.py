@@ -22,6 +22,7 @@ import numpy as np
 import repro.configs as C
 from repro.core.weight_plan import PlanConfig
 from repro.models.api import get_api
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Request, ServingEngine
 
 from benchmarks.common import emit
@@ -35,7 +36,8 @@ PROMPT_LEN = 6
 
 
 def _run_engine(cfg, params, plan, max_batch: int) -> tuple[float, int]:
-    eng = ServingEngine(cfg, params, max_len=64, max_batch=max_batch, plan=plan)
+    eng = ServingEngine(cfg, params, plan=plan, config=EngineConfig.of(
+            max_len=64, max_batch=max_batch))
     rng = np.random.default_rng(0)
     for uid in range(N_REQUESTS):
         eng.submit(Request(

@@ -36,6 +36,7 @@ from benchmarks import (
     degraded_serving,
     fig7_latency,
     kernel_bench,
+    mixed_serving,
     nopt_validation,
     paged_serving,
     pruned_serving,
@@ -61,6 +62,7 @@ ALL = {
     "speculative_serving": speculative_serving.main,
     "degraded_serving": degraded_serving.main,
     "continuous_serving": continuous_serving.main,
+    "mixed_serving": mixed_serving.main,
     "autotune": autotune_search.main,
     "decode": decode_microbench.main,
 }

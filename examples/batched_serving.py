@@ -15,6 +15,7 @@ import numpy as np
 import repro.configs as C
 from repro.core.batching import BatchSizer, efficiency_curve
 from repro.models.api import get_api
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Request, ServingEngine
 
 ARCH = "tinyllama-1.1b"
@@ -28,7 +29,8 @@ prompts = [rng.integers(0, cfg.vocab, size=PROMPT).astype(np.int32) for _ in ran
 
 
 def serve(max_batch):
-    eng = ServingEngine(cfg, params, max_len=64, max_batch=max_batch)
+    eng = ServingEngine(cfg, params, config=EngineConfig.of(
+            max_len=64, max_batch=max_batch))
     for i, p in enumerate(prompts):
         eng.submit(Request(uid=i, prompt=p, max_new_tokens=MAX_NEW))
     t0 = time.time()

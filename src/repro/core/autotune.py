@@ -972,3 +972,18 @@ def engine_kwargs(doc: dict) -> dict:
     if int(s.get("spec_k") or 0) > 0:
         kw["spec_k"] = int(s["spec_k"])
     return kw
+
+
+def engine_config(doc: dict, **overrides):
+    """The TunedPlan's serving point as an ``EngineConfig`` (serving/
+    config.py): the flat tuned keys route into the subsystem dataclasses
+    via ``EngineConfig.of``.  ``overrides`` win over the artifact (pass
+    ``mesh=``, ``draft_cfg=``/``draft_params=`` here — the artifact only
+    records ``spec_k``, which is dropped unless a draft is supplied)."""
+    from repro.serving.config import EngineConfig
+
+    kw = engine_kwargs(doc)
+    if "draft_cfg" not in overrides:
+        kw.pop("spec_k", None)
+    kw.update(overrides)
+    return EngineConfig.of(**kw)

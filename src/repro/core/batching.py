@@ -348,3 +348,75 @@ def efficiency_curve(sizer: BatchSizer, batches: Sequence[int]) -> list[dict]:
             }
         )
     return out
+
+
+# ---------------------------------------------------------------------------
+# mixed-workload sizing (heterogeneous serving)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedSizer:
+    """Machine-balance accounting for a blend of model families served by
+    one engine (serving/mixed.py): each family keeps its own ``BatchSizer``
+    — its own weight stream and its own bytes/token (``api.
+    kv_bytes_per_token`` folds recurrent-state and encoder-frame streams
+    into the rate) — and the blend's tick interleaves one compiled step per
+    family, so a mixed tick's time is the SUM of the member steps at their
+    own batch shares.
+
+    ``weights`` are traffic fractions (requests of each family per unit
+    traffic); they normalize internally.  ``n_opt`` stays meaningful
+    per-family: mixing families never changes where each family's own
+    t_calc == t_mem balance point sits, it only divides the tick between
+    them — which is exactly why the mixed benchmark's floor is the
+    *time-weighted* blend of solo rates, not their arithmetic mean.
+    """
+
+    sizers: dict  # family name -> BatchSizer
+    weights: dict  # family name -> traffic fraction (any positive scale)
+
+    def __post_init__(self):
+        if set(self.sizers) != set(self.weights):
+            raise ValueError(
+                f"sizers/weights keys differ: {sorted(self.sizers)} vs "
+                f"{sorted(self.weights)}")
+        if not self.sizers:
+            raise ValueError("MixedSizer needs at least one family")
+        total = sum(self.weights.values())
+        if total <= 0:
+            raise ValueError("weights must sum to a positive value")
+
+    def share(self, name: str) -> float:
+        total = sum(self.weights.values())
+        return self.weights[name] / total
+
+    @property
+    def n_opt(self) -> dict:
+        """Per-family balance points — unchanged by mixing."""
+        return {name: s.n_opt for name, s in self.sizers.items()}
+
+    def batches(self, batch: int) -> dict:
+        """Split a total batch across families by traffic share (each
+        family gets >= 1 when the blend carries it at all)."""
+        return {name: max(1, round(batch * self.share(name)))
+                for name in self.sizers}
+
+    def step_time(self, batch: int) -> float:
+        """One mixed tick: every family runs its own compiled step at its
+        share of the batch, sequentially (one device, one stream)."""
+        return sum(self.sizers[name].step_time(b)
+                   for name, b in self.batches(batch).items())
+
+    def tokens_per_s(self, batch: int) -> float:
+        return sum(self.batches(batch).values()) / self.step_time(batch)
+
+    def blended_floor(self, batch: int) -> float:
+        """The traffic-weighted solo rate the mixed engine is measured
+        against: total tokens over the sum of each family's solo time for
+        its share — the time-weighted harmonic blend (the arithmetic mean
+        of solo rates is unattainable when steps interleave on one
+        device)."""
+        bs = self.batches(batch)
+        solo_time = sum(self.sizers[n].step_time(b) for n, b in bs.items())
+        return sum(bs.values()) / solo_time

@@ -16,8 +16,9 @@ special cases, at a documented efficiency cost reported by the roofline.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import threading
-from typing import Optional, Sequence, Union
+from typing import Any, Optional, Sequence, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -193,6 +194,70 @@ def registry_table() -> dict:
     structured-kind names."""
     return {**{k: AXIS_REGISTRY[k] for k in sorted(AXIS_REGISTRY)},
             "node_kinds": tuple(name for name, _, _ in _NODE_RULES)}
+
+
+# ---------------------------------------------------------------------------
+# cache-kind registry: ONE table of serving-state leaf kinds
+# ---------------------------------------------------------------------------
+#
+# The axis registry above answers "how does this leaf shard"; serving also
+# needs "what IS this leaf" — is it positionally addressed (a KV cache with
+# a sequence axis the engine can page, window, or speculative-write), or
+# recurrent state (a fixed-size summary the step rewrites in place)?  That
+# classification used to live implicitly in per-family code paths
+# (`supports_paged_kv`, transformer's kind dispatch, the engine's spec
+# gates).  `register_cache_kind` layers it on `register_axes`: every model
+# family registers its serving-state leaves here — attention KV and paged
+# pools, enc-dec/VLM cross-attention frames, rgLRU/xLSTM recurrent state —
+# so the engine, the sharding dry-run, and the docs all read one table.
+
+CACHE_KIND_REGISTRY: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheKind:
+    """One serving-state leaf kind.
+
+    ``axes`` is either a logical-axes tuple (single-leaf kinds) or a dict
+    of sub-leaf name -> tuple (multi-leaf kinds like recurrent state);
+    every tuple is also entered in the axis registry (as ``name`` or
+    ``name.sub``) so sharding keeps working through ``axes_for``.
+    ``positional`` marks sequence-addressed storage — the property that
+    gates paging, speculative decode, and chunked prefill.  ``paged`` marks
+    the pool-resident layout variants.  ``family`` groups kinds by the
+    module that owns the layout.
+    """
+
+    name: str
+    axes: Any
+    positional: bool
+    paged: bool = False
+    family: str = "attn"
+
+
+def register_cache_kind(name: str, axes, *, positional: bool,
+                        paged: bool = False, family: str = "attn"):
+    """Register a serving-state leaf kind; returns the stored axes (tuple
+    kinds) so definition sites can register and consume in one expression,
+    matching ``register_axes``."""
+    if isinstance(axes, dict):
+        stored = {k: register_axes(f"{name}.{k}", v) for k, v in axes.items()}
+    else:
+        stored = register_axes(name, axes)
+    CACHE_KIND_REGISTRY[name] = CacheKind(
+        name=name, axes=stored, positional=positional, paged=paged,
+        family=family)
+    return stored
+
+
+def cache_kind(name: str) -> CacheKind:
+    return CACHE_KIND_REGISTRY[name]
+
+
+def cache_kind_table() -> dict:
+    """name -> CacheKind for every registered serving-state kind, in sorted
+    order (docs/architecture.md renders this table)."""
+    return {k: CACHE_KIND_REGISTRY[k] for k in sorted(CACHE_KIND_REGISTRY)}
 
 
 def _leaf_spec(mesh, rules, leaf, ax) -> P:

@@ -24,6 +24,7 @@ extra batch samples).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 import warnings
 
@@ -43,8 +44,10 @@ from repro.models.api import (
     supports_int8_kv,
     supports_paged_kv,
 )
+from repro.serving.config import config_from_args
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.faultinject import TickClock
+from repro.serving.mixed import MixedServingEngine, WorkloadSpec
 from repro.serving.loadgen import (
     LengthMixture,
     load_trace,
@@ -101,9 +104,109 @@ def _build_plan(api, cfg, params, pc: PlanConfig, cache_dir: str | None):
     return plan
 
 
+def _parse_mix(spec: str, ap) -> list:
+    """'arch:weight,arch:weight' -> [(arch, weight)] (weight defaults 1)."""
+    out = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        arch, _, w = part.partition(":")
+        if arch not in C.ARCH_IDS:
+            ap.error(f"--workload-mix: unknown arch {arch!r} "
+                     f"(choose from {', '.join(C.ARCH_IDS)})")
+        try:
+            weight = float(w) if w else 1.0
+        except ValueError:
+            ap.error(f"--workload-mix: bad weight {w!r} for {arch}")
+        out.append((arch, weight))
+    if not out:
+        ap.error("--workload-mix: empty spec")
+    return out
+
+
+def _main_mixed(args, ap):
+    """Heterogeneous closed-loop serving: one MixedServingEngine admits
+    every family in the mix — per-family compiled steps and sizers, one
+    shared page pool, one submit/step/stats surface."""
+    mix = _parse_mix(args.workload_mix, ap)
+    mesh = M.make_serving_mesh(args.mesh)
+    rng = np.random.default_rng(args.seed)
+    specs, apis = [], {}
+    for arch, weight in mix:
+        cfg = C.get_config(arch, smoke=args.smoke)
+        api = get_api(cfg)
+        params = api.init_params(cfg, jax.random.key(args.seed))
+        paged = args.page_size > 0 and supports_paged_kv(cfg)
+        ctx = (mean_decode_context(args.prompt_len + api.prefix_len(cfg),
+                                   args.max_new) if paged else args.max_len)
+        rules = M.rules_for(cfg, None, mesh=mesh) if mesh is not None else None
+        ec = config_from_args(args, mesh=mesh, rules=rules,
+                              expected_context=ctx if paged else None)
+        if ec.cache.kv_dtype and not supports_int8_kv(cfg):
+            # per-family downgrade, not per-run: whisper keeps an fp cache
+            # while the text member of the same mix serves int8
+            ec = dataclasses.replace(
+                ec, cache=dataclasses.replace(ec.cache, kv_dtype=None))
+        specs.append(WorkloadSpec(name=arch, cfg=cfg, params=params,
+                                  config=ec, weight=weight))
+        apis[arch] = (cfg, api)
+    engine = MixedServingEngine(specs, num_pages=args.pool_pages or None)
+    print(f"[serve] workload mix: "
+          + ", ".join(f"{a}:{w:g}" for a, w in mix)
+          + f" (one engine, {len(mix)} compiled step sets)")
+    if engine.allocator is not None:
+        print(f"[serve] shared page pool: {engine.num_pages} pages x "
+              f"{args.page_size} tok across "
+              f"{sum(e.paged for e in engine.engines.values())} paged "
+              f"families")
+    n_total = args.requests
+    uid = 0
+    for arch, weight in mix:
+        cfg, api = apis[arch]
+        n = max(1, round(n_total * engine.sizer.share(arch)))
+        for _ in range(n):
+            extras = {}
+            if "patches" in api.extra_keys:
+                extras["patches"] = rng.normal(
+                    size=(cfg.n_patches, cfg.d_model)).astype(np.float32)
+            if "frames" in api.extra_keys:
+                extras["frames"] = rng.normal(
+                    size=(cfg.n_frames, cfg.d_model)).astype(np.float32)
+            engine.submit(arch, Request(
+                uid=uid,
+                prompt=rng.integers(0, cfg.vocab,
+                                    size=args.prompt_len).astype(np.int32),
+                max_new_tokens=args.max_new,
+                extras=extras or None,
+            ))
+            uid += 1
+    t0 = time.time()
+    stats = engine.run_until_done()
+    dt = time.time() - t0
+    engine.audit_pages()  # raises on any cross-family page leak
+    for arch, s in stats.items():
+        print(f"[serve]   {arch}: {s.completed} completed, "
+              f"{s.decode_tokens} tokens, mean batch {s.mean_batch:.2f} "
+              f"(n_opt {_fmt_nopt(engine.sizer.n_opt[arch])})")
+    agg = engine.aggregate_stats()
+    print(f"[serve] mixed: {agg.completed}/{uid} requests in {dt:.2f}s; "
+          f"{agg.decode_tokens} tokens "
+          f"({agg.decode_tokens / max(dt, 1e-9):.1f} tok/s on this host), "
+          f"{engine.tick} ticks, page audit clean")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=C.ARCH_IDS)
+    ap.add_argument("--arch", default=None, choices=C.ARCH_IDS)
+    ap.add_argument("--workload-mix", default=None, metavar="SPEC",
+                    help="heterogeneous serving: comma-separated "
+                         "'arch:weight' list (e.g. 'tinyllama-1.1b:2,"
+                         "whisper-tiny:1') served by ONE MixedServingEngine "
+                         "— one engine tick runs each family's own compiled "
+                         "step and all paged families draw from one shared "
+                         "page pool; --requests splits by weight "
+                         "(closed-loop only, replaces --arch)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
@@ -186,6 +289,20 @@ def main(argv=None):
                          "(serving/loadgen format; takes precedence over "
                          "--arrival-rate)")
     args = ap.parse_args(argv)
+
+    if args.workload_mix:
+        for flag, ok in (("--arch", not args.arch),
+                         ("--autotune-plan", not args.autotune_plan),
+                         ("--compress", args.compress == "none"),
+                         ("--draft-config", not args.draft_config),
+                         ("--trace", not args.trace),
+                         ("--arrival-rate", args.arrival_rate == 0)):
+            if not ok:
+                ap.error(f"--workload-mix is closed-loop heterogeneous "
+                         f"serving; drop {flag}")
+        return _main_mixed(args, ap)
+    if not args.arch:
+        ap.error("one of --arch / --workload-mix is required")
 
     cfg = C.get_config(args.arch, smoke=args.smoke)
     tuned = None
@@ -298,28 +415,17 @@ def main(argv=None):
             f"the global pool — budget --pool-pages accordingly",
             stacklevel=1)
     open_loop = bool(args.trace) or args.arrival_rate > 0
-    engine_kw = {}
-    if open_loop:
+    # the engine would warn-and-serve-fp itself; pre-clearing keeps the
+    # sizer's logged budget consistent with the cache actually allocated
+    args.kv_dtype = "int8" if kv_dtype else "fp"
+    args.pool_pages = pool_pages
+    engine = ServingEngine(cfg, params, plan=plan, config=config_from_args(
+        args, mesh=mesh, rules=rules,
         # open-loop timing is simulated: one tick = one time unit of the
         # arrival schedule, so deadlines/TTFT/latency are seed-reproducible
-        engine_kw["clock"] = TickClock()
-    engine = ServingEngine(cfg, params, max_len=args.max_len,
-                           max_batch=args.max_batch, plan=plan,
-                           kv_dtype=kv_dtype,
-                           page_size=args.page_size or None,
-                           num_pages=pool_pages or None,
-                           share_prefix=args.share_prefix,
-                           expected_context=ctx if paged else None,
-                           mesh=mesh, rules=rules,
-                           draft_cfg=draft_cfg, draft_params=draft_params,
-                           spec_k=spec_k,
-                           prefill_chunk=args.prefill_chunk or None,
-                           prefill_budget=args.prefill_budget or None,
-                           request_timeout_s=args.request_timeout or None,
-                           ttft_deadline_s=args.ttft_deadline or None,
-                           max_retries=args.max_retries,
-                           evict_policy=args.evict_policy,
-                           **engine_kw)
+        clock=TickClock() if open_loop else None,
+        expected_context=ctx if paged else None,
+        draft_cfg=draft_cfg, draft_params=draft_params))
     if engine.prefill_chunk is not None:
         print(f"[serve] continuous batching: {engine.prefill_chunk}-token "
               f"prefill chunks, {engine.prefill_budget} tok/tick budget")

@@ -136,28 +136,56 @@ def supports_spec_decode(cfg) -> bool:
 
 
 def supports_paged_kv(cfg) -> bool:
-    """Whether this family serves through the paged KV cache.  The decoder-
-    only transformer stack (dense / moe / ssm / hybrid) threads the page
-    table through its decode step; VLM/enc-dec decoders and attention-free
-    stacks (pure recurrent/xLSTM) don't — the engine falls back to the
+    """Whether this family serves through the paged KV cache.  Decoder-only
+    transformer stacks thread the page table through their decode step; the
+    enc-dec/VLM decoders do too (paged self-attn plus pooled encoder frames
+    through ``xpage_table`` for enc-dec; the VLM decoder IS the transformer
+    decode path).  Attention-free stacks (pure recurrent/xLSTM) have no
+    positionally-addressed cache to page — the engine falls back to the
     contiguous per-slot cache for them."""
-    if get_api(cfg) is not _TRANSFORMER_API:
-        return False
+    if get_api(cfg) is _ENCDEC_API:
+        return True
     kinds = getattr(cfg, "layer_kinds", ()) or ()
     return "global" in kinds
 
 
+@functools.lru_cache(maxsize=None)
+def state_bytes_per_step(cfg) -> float:
+    """HBM bytes of NON-positional serving state read per decode step per
+    sequence: recurrent/xLSTM summaries and the enc-dec cross-attention
+    frames — everything the step streams in full regardless of context
+    length.  Derived structurally: shape-probe the family's cache and sum
+    the leaves whose registered axes carry no ``cache_seq`` dimension
+    (those leaves don't grow with context, so the step reads all of them).
+    Pure-attention stacks return 0.0 — their whole cache is the
+    context-proportional stream ``kv_bytes_per_token`` charges."""
+    api = get_api(cfg)
+    cache = jax.eval_shape(functools.partial(
+        api.init_cache, cfg, 1, 2, jnp.dtype(cfg.compute_dtype)))
+    axes = api.cache_axes(cfg)
+    total = 0.0
+    for leaf, ax in zip(jax.tree.leaves(cache),
+                        jax.tree.leaves(axes, is_leaf=lambda x:
+                                        isinstance(x, tuple))):
+        if "cache_seq" not in tuple(ax or ()):
+            total += leaf.size * leaf.dtype.itemsize
+    return float(total)
+
+
 def kv_bytes_per_token(cfg, kv_dtype=None, context_len: int | None = None) -> float:
-    """HBM bytes of KV cache read per decoded token per unit of context —
+    """HBM bytes of cache/state read per decoded token per unit of context —
     the ``kv_bytes_per_token`` the perf model / BatchSizer charge.
 
-    Counts attention layers only (recurrent / xLSTM state is O(1) in
-    context).  ``kv_dtype=jnp.int8`` accounts the quantized cache: 1-byte
-    payloads plus one fp32 scale per (token, head) for each of K and V.
-    ``context_len`` caps sliding-window (``local``) layers at their actual
-    ring-buffer length ``cfg.local_window`` — the effective per-context-
-    token rate is scaled by window/context so that
-    rate * context_len == true bytes read per token.
+    Attention layers are the context-proportional stream.  ``kv_dtype=
+    jnp.int8`` accounts the quantized cache: 1-byte payloads plus one fp32
+    scale per (token, head) for each of K and V.  ``context_len`` caps
+    sliding-window (``local``) layers at their actual ring-buffer length
+    ``cfg.local_window``, and folds in the per-step state stream
+    (``state_bytes_per_step``: recurrent summaries, enc-dec frames) at
+    ``state / context_len`` — in both cases the effective per-context-token
+    rate is scaled so that rate * context_len == true bytes read per step.
+    This is what lets one ``BatchSizer`` charge every family its own
+    bytes/token in a mixed blend.
     """
     per_kv = cfg.n_kv_heads * cfg.hd
     if kv_dtype is not None and jnp.dtype(kv_dtype) == jnp.int8:
@@ -166,16 +194,19 @@ def kv_bytes_per_token(cfg, kv_dtype=None, context_len: int | None = None) -> fl
         per_layer = 2.0 * per_kv * jnp.dtype(cfg.compute_dtype).itemsize
     kinds = getattr(cfg, "layer_kinds", None)
     if kinds is None:
-        return float(cfg.n_layers * per_layer)
-    total = 0.0
-    for k in kinds:
-        if k == "global":
-            total += per_layer
-        elif k == "local":
-            frac = 1.0
-            if context_len:
-                frac = min(context_len, cfg.local_window) / context_len
-            total += per_layer * frac
+        total = float(cfg.n_layers * per_layer)
+    else:
+        total = 0.0
+        for k in kinds:
+            if k == "global":
+                total += per_layer
+            elif k == "local":
+                frac = 1.0
+                if context_len:
+                    frac = min(context_len, cfg.local_window) / context_len
+                total += per_layer * frac
+    if context_len:
+        total += state_bytes_per_step(cfg) / context_len
     return float(total)
 
 

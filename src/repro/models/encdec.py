@@ -192,7 +192,8 @@ def loss_fn(cfg, params, batch):
     return loss, {"loss": loss}
 
 
-def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16, kv_dtype=None):
+def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16, kv_dtype=None,
+               page_size: int | None = None, num_pages: int | None = None):
     """Decoder self-attn KV (length) + cross K/V (n_frames), stacked over
     decoder layers.
 
@@ -200,9 +201,29 @@ def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16, kv_dtype=None):
     cross K/V is computed once per request (not a growing stream) and the
     self-attn cache at audio decode lengths is small — the int8 cache
     targets the long-context transformer families.
+
+    ``page_size`` selects the paged layout: the decoder self-attn cache
+    becomes (Ld, num_pages, ps, KVH, hd) pools addressed through
+    ``page_table``, exactly like the transformer families — and the static
+    encoder cross K/V becomes a first-class paged resource too: per-layer
+    ``x`` pools addressed through ``xpage_table``, so a request's encoder
+    frames occupy refcounted pages from the SAME allocator id space as its
+    decoder KV (both pool sets are sized ``num_pages``; at audio scales the
+    extra pool memory is small and the shared id space is what lets one
+    allocator account mixed-family capacity exactly).
     """
     KVH, hd = cfg.n_kv_heads, cfg.hd
     Ld = cfg.n_layers
+    if page_size is not None:
+        ps = int(page_size)
+        z = jnp.zeros((Ld, num_pages, ps, KVH, hd), dtype)
+        return {
+            "dec": {"k_pages": z, "v_pages": z},
+            "x": {"k_pages": z, "v_pages": z},
+            "page_table": jnp.zeros((batch, -(-length // ps)), jnp.int32),
+            "xpage_table": jnp.zeros(
+                (batch, -(-cfg.n_frames // ps)), jnp.int32),
+        }
     z = jnp.zeros((Ld, batch, length, KVH, hd), dtype)
     zx = jnp.zeros((Ld, batch, cfg.n_frames, KVH, hd), dtype)
     return {"k": z, "v": z, "xk": zx, "xv": zx}
@@ -210,13 +231,32 @@ def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16, kv_dtype=None):
 
 # cross-attention K/V are filled once at prefill and read-only thereafter:
 # frames replicated, heads tensor-parallel like the self-attention cache.
-_XKV_AXES = sl.register_axes("encdec.xkv", ("batch", None, "kv_heads", None))
+_XKV_AXES = sl.register_cache_kind(
+    "encdec.xkv", ("batch", None, "kv_heads", None),
+    positional=True, family="encdec")
+# paged variants: encoder-frame pools shard like the attention page pools
+# (kv_heads tensor-parallel, page axes replicated); the frame page table is
+# host-owned per replica like the decoder's.
+_XKV_PAGES_AXES = sl.register_cache_kind(
+    "encdec.xkv_pages", (None, None, "kv_heads", None),
+    positional=True, paged=True, family="encdec")
+_XPAGE_TABLE_AXES = sl.register_cache_kind(
+    "encdec.xpage_table", ("batch", None),
+    positional=True, paged=True, family="encdec")
 
 
 def cache_axes(cfg, quantized_kv: bool = False, paged: bool = False):
-    """``quantized_kv`` / ``paged`` accepted for API uniformity: the enc-dec
-    cache supports neither (the engine warns and serves the fp contiguous
-    cache), so the axes are always the fp layout."""
+    """``quantized_kv`` accepted for API uniformity (the enc-dec cache
+    ignores kv_dtype, so the axes are always the fp layout)."""
+    if paged:
+        pk = (None,) + sl.axes_for("attn.kv_pages")
+        xpk = (None,) + _XKV_PAGES_AXES
+        return {
+            "dec": {"k_pages": pk, "v_pages": pk},
+            "x": {"k_pages": xpk, "v_pages": xpk},
+            "page_table": sl.axes_for("page_table"),
+            "xpage_table": _XPAGE_TABLE_AXES,
+        }
     ax = (None,) + sl.axes_for("attn.kv")
     axx = (None,) + _XKV_AXES
     return {"k": ax, "v": ax, "xk": axx, "xv": axx}
@@ -249,20 +289,27 @@ def prefill(cfg, params, tokens, frames, cache):
     return logits, new_cache
 
 
+def _embed_decode(cfg, params, tokens, pos):
+    B, T = tokens.shape
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    positions = pos[:, None] + jnp.arange(T)[None]  # (B, T)
+    return x + jnp.take(
+        params["pos_dec"],
+        jnp.minimum(positions, params["pos_dec"].shape[0] - 1),
+        axis=0,
+    ).astype(x.dtype)
+
+
 def decode_step(cfg, params, cache, tokens, pos):
     """One decoder step against self+cross caches.  tokens (B, T), pos (B,)
     the position of tokens[:, 0] — T=1 is the classic step; T>1 threads a
     multi-token span through the same single-pass attention paths as the
     transformer families (self-attn verify masking in decode_attention,
-    cross-attn via the multi-query kernel)."""
-    B, T = tokens.shape
-    x = L.embed_tokens(cfg, params["embed"], tokens)
-    positions = pos[:, None] + jnp.arange(T)[None]  # (B, T)
-    x = x + jnp.take(
-        params["pos_dec"],
-        jnp.minimum(positions, params["pos_dec"].shape[0] - 1),
-        axis=0,
-    ).astype(x.dtype)
+    cross-attn via the multi-query kernel).  A paged cache (carrying
+    ``page_table``) routes through the pooled layout instead."""
+    if "page_table" in cache:
+        return _paged_decode_step(cfg, params, cache, tokens, pos)
+    x = _embed_decode(cfg, params, tokens, pos)
 
     def body(x, xs):
         p, c = xs
@@ -276,6 +323,50 @@ def decode_step(cfg, params, cache, tokens, pos):
     x = L.apply_norm(params["final_norm"], x, "layernorm")
     logits = L.unembed(cfg, params["embed"], x)
     new_cache = {"k": kvs["k"], "v": kvs["v"], "xk": cache["xk"], "xv": cache["xv"]}
+    return logits, new_cache
+
+
+def _paged_decode_step(cfg, params, cache, tokens, pos):
+    """Paged decode: self-attention scatters/reads through ``page_table``
+    like the transformer families; cross-attention gathers each slot's
+    encoder frames from the ``x`` pools through ``xpage_table`` and scores
+    them with the same single-pass multi-query kernel.  Dead slots' table
+    rows point at the null page, so their scatters/gathers produce
+    row-local garbage nobody reads."""
+    B, T = tokens.shape
+    H, hd = cfg.n_heads, cfg.hd
+    KVH = cfg.n_kv_heads
+    table = cache["page_table"]
+    xtable = cache["xpage_table"]
+    x = _embed_decode(cfg, params, tokens, pos)
+
+    def body(x, xs):
+        p, c, cx = xs
+        h = L.apply_norm(p["ln1"], x, "layernorm")
+        q = L.qdense(h, p["attn"]["wq"]).reshape(B, T, H, hd)
+        k = L.qdense(h, p["attn"]["wk"]).reshape(B, T, KVH, hd)
+        v = L.qdense(h, p["attn"]["wv"]).reshape(B, T, KVH, hd)
+        kp = L.paged_cache_update(c["k_pages"], k, table, pos)
+        vp = L.paged_cache_update(c["v_pages"], v, table, pos)
+        o = L.paged_decode_attention(q, kp, vp, table, pos)
+        x = x + L.qdense(o.reshape(B, T, H * hd), p["attn"]["wo"])
+        hx = L.apply_norm(p["lnx"], x, "layernorm")
+        qx = L.qdense(hx, p["xattn"]["wq"]).reshape(B, T, H, hd)
+        # the last frame page's tail holds stale pool contents: slice the
+        # gathered view to the true frame count before scoring.
+        xk = L.gather_pages(cx["k_pages"], xtable)[:, : cfg.n_frames]
+        xv = L.gather_pages(cx["v_pages"], xtable)[:, : cfg.n_frames]
+        o = L.cross_decode_attention(qx, xk.astype(x.dtype), xv.astype(x.dtype))
+        x = x + L.qdense(o.reshape(B, T, H * hd), p["xattn"]["wo"])
+        h2 = L.apply_norm(p["ln2"], x, "layernorm")
+        x = x + L.apply_mlp(cfg, p["mlp"], h2)
+        return x, {"k_pages": kp, "v_pages": vp}
+
+    x, pools = jax.lax.scan(body, x, (params["dec"], cache["dec"], cache["x"]))
+    x = L.apply_norm(params["final_norm"], x, "layernorm")
+    logits = L.unembed(cfg, params["embed"], x)
+    new_cache = {"dec": pools, "x": cache["x"],
+                 "page_table": table, "xpage_table": xtable}
     return logits, new_cache
 
 

@@ -663,13 +663,16 @@ def init_attn_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16):
     return {"k": z, "v": z}
 
 
-# axis-rules registry entries (distributed/shardlib): the KV-cache leaf
-# layouts register their logical axes once, here, where the layouts are
-# defined; the engine's cache placement, the launcher's in_shardings, and
-# the in-step shard_pinned constraints all read the same entries.
-_KV_AXES = sl.register_axes("attn.kv", ("batch", "cache_seq", "kv_heads", None))
-_KV_SCALE_AXES = sl.register_axes(
-    "attn.kv_scale", ("batch", "cache_seq", "kv_heads"))
+# cache-kind registry entries (distributed/shardlib): the KV-cache leaf
+# layouts register their logical axes AND their serving classification
+# (positionally addressed, pageable) once, here, where the layouts are
+# defined; the engine's cache placement, the launcher's in_shardings, the
+# in-step shard_pinned constraints, and the capability gates all read the
+# same entries.
+_KV_AXES = sl.register_cache_kind(
+    "attn.kv", ("batch", "cache_seq", "kv_heads", None), positional=True)
+_KV_SCALE_AXES = sl.register_cache_kind(
+    "attn.kv_scale", ("batch", "cache_seq", "kv_heads"), positional=True)
 
 
 def attn_cache_axes(quantized: bool = False):
@@ -712,9 +715,12 @@ def init_paged_attn_cache(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat1
 # heads' slice of each, so the page table stays host-side per-replica and
 # the decode gather never crosses chips).  The page axes stay replicated:
 # the table maps any slot to any physical page.
-_KV_PAGES_AXES = sl.register_axes("attn.kv_pages", (None, None, "kv_heads", None))
-_KV_SCALE_PAGES_AXES = sl.register_axes(
-    "attn.kv_scale_pages", (None, None, "kv_heads"))
+_KV_PAGES_AXES = sl.register_cache_kind(
+    "attn.kv_pages", (None, None, "kv_heads", None),
+    positional=True, paged=True)
+_KV_SCALE_PAGES_AXES = sl.register_cache_kind(
+    "attn.kv_scale_pages", (None, None, "kv_heads"),
+    positional=True, paged=True)
 
 
 def paged_attn_cache_axes(quantized: bool = False):

@@ -62,8 +62,18 @@ def init_rglru_state(cfg, batch: int, dtype=jnp.float32):
     }
 
 
+# recurrent state is NOT positionally addressed: the step rewrites a
+# fixed-size summary in place, so there is nothing to page and no way to
+# mask uncommitted positions (the property `supports_spec_decode` and the
+# engine's chunked-prefill gate key on).
+_RGLRU_STATE_AXES = sl.register_cache_kind(
+    "rec.state",
+    {"h": ("batch", "ff"), "conv": ("batch", None, "ff")},
+    positional=False, family="recurrent")
+
+
 def rglru_state_axes():
-    return {"h": ("batch", "ff"), "conv": ("batch", None, "ff")}
+    return dict(_RGLRU_STATE_AXES)
 
 
 def apply_rglru(cfg, p, x: jax.Array, state=None):

@@ -77,9 +77,17 @@ def init_mlstm_state(cfg, batch: int, dtype=jnp.float32):
     }
 
 
+# like rec.state: fixed-size in-place summaries, not positionally addressed
+# — no paging, no speculative writes, no chunked-prefill masking.
+_MLSTM_STATE_AXES = sl.register_cache_kind(
+    "mlstm.state",
+    {"C": ("batch", "heads", None, None), "n": ("batch", "heads", None),
+     "m": ("batch", "heads"), "conv": ("batch", None, "ff")},
+    positional=False, family="ssm")
+
+
 def mlstm_state_axes():
-    return {"C": ("batch", "heads", None, None), "n": ("batch", "heads", None),
-            "m": ("batch", "heads"), "conv": ("batch", None, "ff")}
+    return dict(_MLSTM_STATE_AXES)
 
 
 def apply_mlstm(cfg, p, x: jax.Array, state=None, chunk: int = 64):
@@ -263,9 +271,15 @@ def init_slstm_state(cfg, batch: int, dtype=jnp.float32):
     return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -1e30, jnp.float32)}
 
 
+_SLSTM_STATE_AXES = sl.register_cache_kind(
+    "slstm.state",
+    {"c": ("batch", None), "n": ("batch", None), "h": ("batch", None),
+     "m": ("batch", None)},
+    positional=False, family="ssm")
+
+
 def slstm_state_axes():
-    return {"c": ("batch", None), "n": ("batch", None), "h": ("batch", None),
-            "m": ("batch", None)}
+    return dict(_SLSTM_STATE_AXES)
 
 
 def apply_slstm(cfg, p, x: jax.Array, state=None):

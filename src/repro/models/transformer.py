@@ -348,7 +348,8 @@ def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16, kv_dtype=None,
 # the page table is owned host-side per replica (serving/paged.py): batch
 # rides the data axes, the logical-page axis is never sharded — every chip
 # in a model group resolves the same slot -> physical-page mapping.
-_PAGE_TABLE_AXES = sl.register_axes("page_table", ("batch", None))
+_PAGE_TABLE_AXES = sl.register_cache_kind(
+    "page_table", ("batch", None), positional=True, paged=True)
 
 
 def cache_axes(cfg, quantized_kv: bool = False, paged: bool = False):

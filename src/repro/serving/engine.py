@@ -152,9 +152,9 @@ from repro.models.api import (
     kv_bytes_per_token,
     supports_int8_kv,
     supports_paged_kv,
-    supports_spec_decode,
 )
 from repro.models.layers import finite_rows
+from repro.serving.config import EngineConfig, positional_state_gate
 from repro.serving.paged import (
     NULL_PAGE,
     PageAllocator,
@@ -333,42 +333,43 @@ class ServingEngine:
         cfg,
         params,
         *,
-        max_len: int = 256,
-        max_batch: Optional[int] = None,
-        sizer: Optional[BatchSizer] = None,
+        config: Optional[EngineConfig] = None,  # the ONE configuration object
         plan=None,  # WeightPlan: sizes the batch for the compressed stream
-        kv_dtype=None,  # "int8" / jnp.int8 selects the quantized KV cache
-        page_size: Optional[int] = None,  # tokens/page: selects the paged cache
-        num_pages: Optional[int] = None,  # pool capacity (default: contiguous parity)
-        share_prefix: bool = False,  # prefix sharing across admitted prompts
-        expected_context: Optional[int] = None,  # mean (S + max_new) for the sizer
-        mesh=None,  # jax Mesh: shard params/caches via the axis-rules registry
-        rules: Optional[dict] = None,  # logical->physical overrides (DEFAULT_RULES base)
-        draft_cfg=None,  # small model proposing spec_k draft tokens per tick
-        draft_params=None,
-        spec_k: int = 0,  # draft tokens per tick (0 = plain decode)
-        # continuous batching: prefill long prompts in fixed-size chunks
-        # interleaved with decode ticks (None = synchronous inline prefill
-        # at admission, the pre-continuous behavior).  prefill_budget caps
-        # prompt tokens advanced per tick across all in-flight prefills
-        # (default: one chunk per tick).
-        prefill_chunk: Optional[int] = None,
-        prefill_budget: Optional[int] = None,
-        seed: int = 0,
-        # -- failure model ------------------------------------------------
-        request_timeout_s: Optional[float] = None,  # default total deadline
-        ttft_deadline_s: Optional[float] = None,  # default TTFT deadline
-        max_retries: int = 1,  # transient-failure retries per request
-        retry_backoff_s: float = 0.0,  # backoff base (doubles per retry)
-        evict_policy: str = "fifo",  # "fifo" back-pressure | "priority" preempt
-        deadline_slack_s: float = 0.0,  # TTFT pressure window for preemption
-        clock: Callable[[], float] = time.monotonic,
-        watchdog_timeout_s: Optional[float] = None,  # HeartbeatMonitor stall
-        fault_injector=None,  # serving/faultinject.FaultInjector (or None)
-        spec_fallback_accept: Optional[float] = None,  # EMA floor; None = off
-        spec_fallback_min_ticks: int = 8,  # spec ticks before the EMA check
-        audit_every_step: bool = False,  # PageAllocator.audit() each tick
+        sizer: Optional[BatchSizer] = None,
+        **legacy,  # deprecated loose kwargs -> EngineConfig.from_legacy
     ):
+        # the serving surface is EngineConfig (serving/config.py): every
+        # knob lives in one of its four subsystem dataclasses.  Loose
+        # kwargs route through the deprecation shim; tools/
+        # check_engine_api.py lints this signature so new knobs cannot
+        # re-grow it.
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either config=EngineConfig(...) or legacy keyword "
+                    f"arguments, not both (got {sorted(legacy)})")
+            config = EngineConfig.from_legacy(**legacy)
+        elif config is None:
+            config = EngineConfig()
+        self.config = config
+        cc, sc, pc, fc = (config.cache, config.scheduler, config.spec,
+                          config.fault)
+        max_len = int(config.max_len)
+        max_batch = config.max_batch
+        mesh = config.mesh
+        rules = config.rules
+        seed = config.seed
+        kv_dtype = cc.kv_dtype
+        page_size = cc.page_size
+        num_pages = cc.num_pages
+        share_prefix = cc.share_prefix
+        expected_context = cc.expected_context
+        prefill_chunk = sc.prefill_chunk
+        prefill_budget = sc.prefill_budget
+        evict_policy = sc.evict_policy
+        draft_cfg = pc.draft_cfg
+        draft_params = pc.draft_params
+        clock = fc.clock
         self.cfg = cfg
         self.mesh = mesh
         self.rules = None
@@ -411,26 +412,12 @@ class ServingEngine:
         # multi-token decode step (draft positions amortize the weight
         # stream exactly like batch samples).  Needs positionally-addressed
         # caches on BOTH models so rejected writes are masked-then-
-        # overwritten instead of rolled back (api.supports_spec_decode).
-        self.spec_k = int(spec_k or 0)
+        # overwritten instead of rolled back — SpecConfig.validated_k is
+        # the single validated check (shared with the chunked-prefill gate
+        # below via config.positional_state_gate).
+        self.spec_k = pc.validated_k(cfg)
         self.draft_cfg = draft_cfg
         self.draft_params = draft_params
-        if self.spec_k:
-            if draft_cfg is None or draft_params is None:
-                raise ValueError("spec_k > 0 needs draft_cfg and draft_params")
-            bad = [c.name for c in (cfg, draft_cfg) if not supports_spec_decode(c)]
-            if bad:
-                import warnings
-
-                warnings.warn(
-                    f"{', '.join(bad)}: speculative decode needs an "
-                    f"attention-only decoder stack (positionally-addressed "
-                    f"caches); serving without speculation", stacklevel=2)
-                self.spec_k = 0
-            elif draft_cfg.vocab != cfg.vocab:
-                raise ValueError(
-                    f"draft vocab {draft_cfg.vocab} != target vocab "
-                    f"{cfg.vocab}: verification compares token ids")
         # continuous batching: chunked prefill runs each chunk as a (1, C)
         # multi-token decode step on a private batch-1 cache — positions
         # [done, done + C) of the prompt — which needs exactly the
@@ -445,13 +432,12 @@ class ServingEngine:
             if prefill_chunk <= 0:
                 raise ValueError(
                     f"prefill_chunk must be positive, got {prefill_chunk}")
-            if not supports_spec_decode(cfg):
+            reason = positional_state_gate(cfg, "chunked prefill")
+            if reason is not None:
                 import warnings
 
                 warnings.warn(
-                    f"{cfg.name}: chunked prefill needs multi-token decode "
-                    f"on a positionally-addressed cache ({cfg.family} does "
-                    f"not qualify); serving synchronous prefill", stacklevel=2)
+                    reason + "; serving synchronous prefill", stacklevel=2)
             else:
                 if any(k == "local" for k in cfg.layer_kinds):
                     # a chunk wider than a sliding-window ring would
@@ -531,17 +517,17 @@ class ServingEngine:
         # -- failure model -------------------------------------------------
         if evict_policy not in ("fifo", "priority"):
             raise ValueError(f"evict_policy must be fifo|priority, got {evict_policy!r}")
-        self.request_timeout_s = request_timeout_s
-        self.ttft_deadline_s = ttft_deadline_s
-        self.max_retries = int(max_retries)
-        self.retry_backoff_s = float(retry_backoff_s)
+        self.request_timeout_s = sc.request_timeout_s
+        self.ttft_deadline_s = sc.ttft_deadline_s
+        self.max_retries = int(sc.max_retries)
+        self.retry_backoff_s = float(sc.retry_backoff_s)
         self.evict_policy = evict_policy
-        self.deadline_slack_s = float(deadline_slack_s)
+        self.deadline_slack_s = float(sc.deadline_slack_s)
         self.clock = clock
-        self.fault_injector = fault_injector
-        self.spec_fallback_accept = spec_fallback_accept
-        self.spec_fallback_min_ticks = int(spec_fallback_min_ticks)
-        self.audit_every_step = bool(audit_every_step)
+        self.fault_injector = fc.fault_injector
+        self.spec_fallback_accept = pc.fallback_accept
+        self.spec_fallback_min_ticks = int(pc.fallback_min_ticks)
+        self.audit_every_step = bool(fc.audit_every_step)
         self.tick = 0  # 1-based after the first step()
         self._admit_seq = 0
         self._spec_ticks = 0
@@ -551,21 +537,49 @@ class ServingEngine:
         self.degraded: dict = {}
         self.spec_active = self.spec_k > 0
         self.watchdog = (
-            HeartbeatMonitor(n_hosts=1, timeout_s=watchdog_timeout_s,
+            HeartbeatMonitor(n_hosts=1, timeout_s=fc.watchdog_timeout_s,
                              clock=clock)
-            if watchdog_timeout_s is not None else None)
+            if fc.watchdog_timeout_s is not None else None)
         self._rng = jax.random.key(seed)
         # host-side RNG for the speculative draft/accept chain (per-slot
         # temperatures; the jax stream above stays the non-spec sampler)
         self._np_rng = np.random.default_rng(seed)
+        # enc-dec paged serving: encoder-frame page lists / table, created
+        # below when the family's paged cache carries an ``xpage_table``.
+        self.xpages_per_seq = 0
+        self.slot_xpages: Optional[List[List[int]]] = None
+        self._xtable = None
         if self.paged:
             self.pages_per_seq = math.ceil(max_len / page_size)
-            # default pool: byte parity with the contiguous reservation
-            # (max_batch * pages_per_seq pages + the null page) — callers
-            # shrink it to realize the paged saving, or keep it and raise
-            # max_batch under the same bytes.
-            self.num_pages = num_pages or (1 + max_batch * self.pages_per_seq)
-            self.allocator = PageAllocator(self.num_pages)
+            if cc.allocator is not None:
+                # mixed-family serving: several engines draw from ONE
+                # allocator (shared capacity, disjoint page ownership);
+                # pool arrays are sized to its id space and the owning
+                # MixedServingEngine runs the cross-engine audit.
+                self.allocator = cc.allocator
+                self._owns_allocator = False
+                self.num_pages = self.allocator.num_pages
+            else:
+                # default pool: byte parity with the contiguous reservation
+                # (max_batch * pages_per_seq pages + the null page) —
+                # callers shrink it to realize the paged saving, or keep it
+                # and raise max_batch under the same bytes.
+                self.num_pages = num_pages or (
+                    1 + max_batch * self.pages_per_seq)
+                self.allocator = PageAllocator(self.num_pages)
+                self._owns_allocator = True
+            if share_prefix and self.api.extra_keys:
+                # prefix sharing keys on prompt tokens only; this family's
+                # KV also depends on per-request frames/patches, so equal
+                # token prefixes are NOT equal cache entries.
+                import warnings
+
+                warnings.warn(
+                    f"{cfg.name}: share_prefix keys on prompt tokens but "
+                    f"this family's cache also depends on "
+                    f"{self.api.extra_keys}; serving without prefix "
+                    f"sharing", stacklevel=2)
+                share_prefix = False
             self.registry = PrefixRegistry() if share_prefix else None
             self.slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
             self._table = np.full(
@@ -575,8 +589,14 @@ class ServingEngine:
                 page_size=page_size, num_pages=self.num_pages,
                 **self._spec_cache_kw(),
             )
+            if isinstance(self.cache, dict) and "xpage_table" in self.cache:
+                self.xpages_per_seq = int(self.cache["xpage_table"].shape[1])
+                self.slot_xpages = [[] for _ in range(max_batch)]
+                self._xtable = np.full(
+                    (max_batch, self.xpages_per_seq), NULL_PAGE, np.int32)
         else:
             self.allocator = None
+            self._owns_allocator = False
             self.registry = None
             # one shared cache for the pool; per-slot prefill uses a batch-1 cache
             self.cache = self.api.init_cache(
@@ -642,11 +662,8 @@ class ServingEngine:
             raise ValueError(
                 f"TunedPlan was searched for arch {tuned.get('arch')!r}, "
                 f"engine config is {cfg.name!r}")
-        kw = AT.engine_kwargs(tuned)
-        if "draft_cfg" not in overrides:
-            kw.pop("spec_k", None)
-        kw.update(overrides)
-        return cls(cfg, params, plan=plan, **kw)
+        return cls(cfg, params, plan=plan,
+                   config=AT.engine_config(tuned, **overrides))
 
     def _build_steps(self):
         """(Re)create the jitted step wrappers.  Called once at init and
@@ -1091,7 +1108,10 @@ class ServingEngine:
             n_total = math.ceil(total / ps)
             n_full = shared_len // ps  # full pages mapped by refcount
             boundary = 1 if shared_len % ps else 0  # partial page: eager COW
-            if not self._can_alloc_pages(n_total - n_full):
+            # enc-dec: the encoded frames claim their own pages from the
+            # same pool — admission back-pressure covers the whole request
+            x_need = self.xpages_per_seq if self.slot_xpages is not None else 0
+            if not self._can_alloc_pages(n_total - n_full + x_need):
                 victim = self._pick_victim(req, now)
                 if victim is None:
                     break  # pool exhausted: request stays queued
@@ -1129,6 +1149,13 @@ class ServingEngine:
                 continue
             try:
                 fresh = self._alloc_pages(n_total - n_full)
+                xpages: List[int] = []
+                if x_need:
+                    try:
+                        xpages = self._alloc_pages(x_need)
+                    except PoolExhausted:
+                        self.allocator.release(fresh)
+                        raise
             except PoolExhausted as e:
                 # raced an (injected) failure between can_alloc and alloc
                 self.allocator.release(retained)
@@ -1145,6 +1172,10 @@ class ServingEngine:
             self.slot_pages[slot] = pages
             self._table[slot, :] = NULL_PAGE
             self._table[slot, : len(pages)] = pages
+            if x_need:
+                self.slot_xpages[slot] = xpages
+                self._xtable[slot, :] = NULL_PAGE
+                self._xtable[slot, : len(xpages)] = xpages
             try:
                 tok, cache1, ok = self._prefill_request(req, tokens)
             except Exception:
@@ -1313,8 +1344,11 @@ class ServingEngine:
         opt-in rather than always-on."""
         if not self.paged:
             return
-        refs = [p for pages in self.slot_pages for p in pages]
-        self.allocator.audit(refs)
+        if self._owns_allocator:
+            # a shared allocator's refcounts span several engines: the
+            # owning MixedServingEngine audits the union of every member's
+            # _page_refs; each member still runs its table-mirror checks.
+            self.allocator.audit(self._page_refs())
         for slot in range(self.max_batch):
             pages = self.slot_pages[slot]
             row = self._table[slot]
@@ -1337,13 +1371,48 @@ class ServingEngine:
             if self.slot_req[slot] is None and pages:
                 raise PageAuditError(
                     f"slot {slot}: free slot still owns pages {pages}")
+            if self.slot_xpages is not None:
+                xpages = self.slot_xpages[slot]
+                xrow = self._xtable[slot]
+                if not (np.array_equal(xrow[: len(xpages)],
+                                       np.asarray(xpages, np.int32))
+                        and np.all(xrow[len(xpages):] == NULL_PAGE)):
+                    raise PageAuditError(
+                        f"slot {slot}: frame table row {xrow.tolist()} does "
+                        f"not mirror the slot mapping {xpages}")
+                if self.slot_req[slot] is None and xpages:
+                    raise PageAuditError(
+                        f"slot {slot}: free slot still owns frame pages "
+                        f"{xpages}")
+
+    def _page_refs(self) -> List[int]:
+        """Every page reference this engine holds (decoder KV pages plus
+        enc-dec frame pages), as the allocator-audit live list."""
+        refs = [p for pages in self.slot_pages for p in pages]
+        if self.slot_xpages is not None:
+            refs += [p for pages in self.slot_xpages for p in pages]
+        return refs
 
     def _cache_entries(self):
-        """Yield (list, index, entry) over the per-layer cache dicts so pool
-        leaves can be replaced in place."""
-        for lst in (self.cache["unit"], self.cache["rem"]):
-            for i in range(len(lst)):
-                yield lst, i, lst[i]
+        """Yield (container, key, entry) over the per-layer cache dicts so
+        pool leaves can be replaced in place (``container[key] = new``).
+        Transformer-family caches carry unit/rem layer lists; the enc-dec
+        paged cache carries one stacked decoder entry (its ``x`` pools are
+        written by ``_write_slot_xpages``, never COWed — frame pages are
+        single-owner)."""
+        if "unit" in self.cache:
+            for lst in (self.cache["unit"], self.cache["rem"]):
+                for i in range(len(lst)):
+                    yield lst, i, lst[i]
+        else:
+            yield self.cache, "dec", self.cache["dec"]
+
+    def _c1_entries(self, cache1) -> list:
+        """The batch-1 contiguous prefill cache's entries, aligned 1:1 with
+        ``_cache_entries`` (enc-dec: the decoder self-attn k/v)."""
+        if "unit" in cache1:
+            return list(cache1["unit"]) + list(cache1["rem"])
+        return [{"k": cache1["k"], "v": cache1["v"]}]
 
     def _copy_page(self, src: int, dst: int):
         """pool[dst] <- pool[src] across every paged leaf (all layers)."""
@@ -1384,7 +1453,7 @@ class ServingEngine:
         phys = np.asarray(
             [self.slot_pages[slot][p // ps] for p in pos_w], np.int32)
         off = (pos_w % ps).astype(np.int32)
-        c1_entries = list(cache1["unit"]) + list(cache1["rem"])
+        c1_entries = self._c1_entries(cache1)
         for n, (lst, i, entry) in enumerate(self._cache_entries()):
             one = c1_entries[n]
             if isinstance(entry, dict) and "k_pages" in entry:
@@ -1400,6 +1469,26 @@ class ServingEngine:
             else:
                 lst[i] = jax.tree.map(
                     functools.partial(self._ins_slot, slot), entry, one)
+        if self.slot_xpages is not None:
+            self._write_slot_xpages(slot, cache1)
+
+    def _write_slot_xpages(self, slot: int, cache1):
+        """Scatter the prefill's per-layer cross-attention K/V (the encoded
+        frames) into this slot's frame pages.  Frame pages are written once
+        here and read-only for the sequence's life — single-owner, so no
+        COW guard is needed."""
+        ps = self.page_size
+        nf = int(self.cfg.n_frames)
+        pos_w = np.arange(nf)
+        phys = np.asarray(
+            [self.slot_xpages[slot][p // ps] for p in pos_w], np.int32)
+        off = (pos_w % ps).astype(np.int32)
+        x = self.cache["x"]
+        new = dict(x)
+        for pk, ck in (("k_pages", "xk"), ("v_pages", "xv")):
+            vals = cache1[ck][:, 0, pos_w]
+            new[pk] = x[pk].at[:, phys, off].set(vals.astype(x[pk].dtype))
+        self.cache["x"] = new
 
     def _free_slot_pages(self, slot: int):
         freed = self.allocator.release(self.slot_pages[slot])
@@ -1407,6 +1496,10 @@ class ServingEngine:
             self.registry.evict(freed)
         self.slot_pages[slot] = []
         self._table[slot, :] = NULL_PAGE
+        if self.slot_xpages is not None:
+            self.allocator.release(self.slot_xpages[slot])
+            self.slot_xpages[slot] = []
+            self._xtable[slot, :] = NULL_PAGE
 
     # -- contiguous-slot plumbing ---------------------------------------------
 
@@ -1473,6 +1566,13 @@ class ServingEngine:
                 self.mesh, table.shape, *sl.axes_for("page_table"),
                 rules=self.rules))
         self.cache["page_table"] = table
+        if self._xtable is not None:
+            xtable = jnp.asarray(self._xtable)
+            if self.mesh is not None:
+                xtable = jax.device_put(xtable, sl.named_sharding(
+                    self.mesh, xtable.shape,
+                    *sl.axes_for("encdec.xpage_table"), rules=self.rules))
+            self.cache["xpage_table"] = xtable
         return ok_live
 
     # -- degradation ladder ---------------------------------------------------

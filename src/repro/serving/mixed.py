@@ -1,0 +1,204 @@
+"""Heterogeneous-workload serving: ONE engine for mixed text / enc-dec /
+VLM / recurrent traffic.
+
+``MixedServingEngine`` wraps one ``ServingEngine`` per workload family
+(each with its own compiled prefill/decode steps, its own ``BatchSizer``
+charged that family's bytes/token, and its own plan) behind one front
+door: one ``submit(name, request)``, one ``step()``, one page pool.
+
+The paper's batching argument is per-model: n samples amortize ONE weight
+transfer, and n_opt is where compute time catches the weight stream.
+Mixing families doesn't change that — each family still has its own
+weight stream and its own balance point — so the right structure is one
+jitted step per family with *shared capacity*, not one megastep.  What IS
+shared:
+
+* **The page pool.**  All paged-capable members draw from one
+  ``PageAllocator`` (injected via ``CacheConfig.allocator``), so a burst
+  in one family can borrow HBM headroom another family isn't using.
+  Ownership stays disjoint (a page belongs to exactly one member's slot)
+  and this engine audits the union of every member's page references —
+  members run only their table-mirror checks (``_owns_allocator=False``).
+* **The accounting.**  ``MixedSizer`` blends the members' sizers under
+  the traffic weights: per-family n_opt stays meaningful (each family is
+  charged its own bytes/token, including the per-step state stream of
+  recurrent/enc-dec members), and ``blended_floor`` gives the
+  time-weighted solo throughput the mixed engine is benchmarked against.
+
+Families whose decode path cannot page (pure recurrent / xLSTM) keep
+their contiguous per-slot caches and simply don't attach to the shared
+allocator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Optional
+
+from repro.core.batching import MixedSizer
+from repro.models.api import get_api, supports_paged_kv
+from repro.serving.config import EngineConfig
+from repro.serving.engine import EngineStats, Request, ServingEngine
+from repro.serving.paged import PageAllocator
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class WorkloadSpec:
+    """One family in the mix: a model, its weights, its EngineConfig, and
+    its share of the traffic.  ``config.cache.allocator`` must be unset —
+    the MixedServingEngine owns the shared pool."""
+
+    name: str
+    cfg: object
+    params: object
+    config: EngineConfig = EngineConfig()
+    plan: object = None
+    weight: float = 1.0
+
+
+def _pages_per_request(spec: WorkloadSpec) -> int:
+    """Worst-case pages one admitted request of this family pins: decoder
+    KV pages for max_len plus (enc-dec) the encoder frame pages — both
+    come out of the one shared pool."""
+    ps = spec.config.cache.page_size
+    pages = math.ceil(spec.config.max_len / ps)
+    n_frames = int(getattr(spec.cfg, "n_frames", 0) or 0)
+    if "frames" in get_api(spec.cfg).extra_keys and n_frames:
+        pages += math.ceil(n_frames / ps)
+    return pages
+
+
+class MixedServingEngine:
+    """One front door over per-family ServingEngines sharing one page pool.
+
+    ``workloads`` is an iterable of ``WorkloadSpec``; ``num_pages`` sizes
+    the shared pool (default: the sum of every paged member's worst-case
+    reservation, i.e. byte parity with running the members solo — shrink
+    it to realize the statistical-sharing saving).
+    """
+
+    def __init__(self, workloads: Iterable[WorkloadSpec], *,
+                 num_pages: Optional[int] = None):
+        workloads = list(workloads)
+        if not workloads:
+            raise ValueError("MixedServingEngine needs at least one workload")
+        names = [w.name for w in workloads]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate workload names: {sorted(names)}")
+        for w in workloads:
+            if w.weight <= 0:
+                raise ValueError(
+                    f"workload {w.name!r}: weight must be positive, got {w.weight}")
+            if w.config.cache.allocator is not None:
+                raise ValueError(
+                    f"workload {w.name!r} carries its own allocator; the "
+                    "MixedServingEngine owns the shared pool — leave "
+                    "CacheConfig.allocator unset")
+
+        paged = [w for w in workloads
+                 if w.config.cache.page_size is not None
+                 and supports_paged_kv(w.cfg)]
+        self.allocator: Optional[PageAllocator] = None
+        if paged:
+            if num_pages is None:
+                for w in paged:
+                    if w.config.max_batch is None:
+                        raise ValueError(
+                            f"workload {w.name!r}: set config.max_batch (or "
+                            "pass num_pages=) so the shared pool can be sized")
+                num_pages = 1 + sum(
+                    w.config.max_batch * _pages_per_request(w) for w in paged)
+            self.allocator = PageAllocator(num_pages)
+        self.num_pages = num_pages
+        paged_names = {w.name for w in paged}
+
+        self.engines: Dict[str, ServingEngine] = {}
+        self.weights: Dict[str, float] = {}
+        for w in workloads:
+            cfg_w = w.config
+            if w.name in paged_names:
+                cfg_w = dataclasses.replace(
+                    cfg_w, cache=dataclasses.replace(
+                        cfg_w.cache, allocator=self.allocator, num_pages=None))
+            self.engines[w.name] = ServingEngine(
+                w.cfg, w.params, config=cfg_w, plan=w.plan)
+            self.weights[w.name] = float(w.weight)
+        self.sizer = MixedSizer(
+            sizers={n: e.sizer for n, e in self.engines.items()},
+            weights=dict(self.weights))
+        self.tick = 0
+        self._audit_every_step = any(
+            e.audit_every_step for e in self.engines.values())
+
+    # -- routing ---------------------------------------------------------------
+
+    def engine(self, name: str) -> ServingEngine:
+        try:
+            return self.engines[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown workload {name!r}; serving {sorted(self.engines)}"
+            ) from None
+
+    def submit(self, name: str, req: Request):
+        self.engine(name).submit(req)
+
+    def cancel(self, name: str, req: Request) -> bool:
+        return self.engine(name).cancel(req)
+
+    # -- serving loop ----------------------------------------------------------
+
+    def step(self) -> int:
+        """One mixed tick: every family runs one engine tick (admission +
+        one batched decode step on ITS compiled step function), in spec
+        order.  Returns total committed tokens across families."""
+        self.tick += 1
+        tokens = 0
+        for eng in self.engines.values():
+            tokens += eng.step()
+        if self._audit_every_step:
+            self.audit_pages()
+        return tokens
+
+    def _busy(self) -> bool:
+        return any(e.queue or e._live_slots() for e in self.engines.values())
+
+    def run_until_done(self, max_ticks: int = 10000) -> Dict[str, EngineStats]:
+        for _ in range(max_ticks):
+            if not self._busy():
+                break
+            self.step()
+        return self.stats
+
+    # -- accounting / invariants ----------------------------------------------
+
+    @property
+    def stats(self) -> Dict[str, EngineStats]:
+        return {name: eng.stats for name, eng in self.engines.items()}
+
+    def aggregate_stats(self) -> EngineStats:
+        """Sum of the members' counters (derived properties recompute from
+        the blended totals)."""
+        total = EngineStats()
+        for eng in self.engines.values():
+            for f in dataclasses.fields(EngineStats):
+                setattr(total, f.name,
+                        getattr(total, f.name) + getattr(eng.stats, f.name))
+        return total
+
+    def _page_refs(self) -> List[int]:
+        return [p for eng in self.engines.values() if eng.paged
+                for p in eng._page_refs()]
+
+    def audit_pages(self):
+        """Cross-family invariant check.  Each member verifies its host
+        page table mirrors its slot→page mapping (members share the
+        allocator, so they skip the refcount audit themselves); then the
+        shared allocator's books are audited against the UNION of every
+        member's live page references — a leak in any family is caught
+        here no matter which family's tick caused it."""
+        for eng in self.engines.values():
+            eng.audit_pages()
+        if self.allocator is not None:
+            self.allocator.audit(self._page_refs())

@@ -22,6 +22,7 @@ from _hypcompat import given, settings, st  # degrades to skips without hypothes
 import repro.configs as C
 from repro.core.batching import BatchSizer
 from repro.models.api import get_api
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Request, RequestState, ServingEngine
 from repro.serving.faultinject import (
     FaultInjector,
@@ -233,16 +234,16 @@ class TestChunkedGating:
     def test_bad_chunk_rejected(self):
         cfg, api, params = _cfg_params()
         with pytest.raises(ValueError):
-            ServingEngine(cfg, params, max_len=32, max_batch=1,
-                          prefill_chunk=0)
+            ServingEngine(cfg, params, config=EngineConfig.of(
+                    max_len=32, max_batch=1, prefill_chunk=0))
 
     def test_budget_defaults_to_chunk(self):
         cfg, api, params = _cfg_params()
-        eng = ServingEngine(cfg, params, max_len=32, max_batch=1,
-                            prefill_chunk=4)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=32, max_batch=1, prefill_chunk=4))
         assert eng.prefill_chunk == 4 and eng.prefill_budget == 4
-        eng = ServingEngine(cfg, params, max_len=32, max_batch=1,
-                            prefill_chunk=4, prefill_budget=12)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=32, max_batch=1, prefill_chunk=4, prefill_budget=12))
         assert eng.prefill_budget == 12
 
 
@@ -271,10 +272,11 @@ class TestChunkedParity:
         cfg, api, params = _cfg_params()
         kw = self._variant_kw(variant)
         reqs = _reqs(cfg, self.LENS)
-        sync = _drain(ServingEngine(cfg, params, **kw), _clone(reqs))
+        sync = _drain(ServingEngine(cfg, params, config=EngineConfig.of(
+                **kw)), _clone(reqs))
         chunked = _drain(
-            ServingEngine(cfg, params, prefill_chunk=8, prefill_budget=8,
-                          **kw),
+            ServingEngine(cfg, params, config=EngineConfig.of(
+                    prefill_chunk=8, prefill_budget=8, **kw)),
             _clone(reqs))
         assert chunked == sync
 
@@ -290,7 +292,8 @@ class TestContinuousEngine:
         base = dict(max_len=96, max_batch=2, page_size=16,
                     prefill_chunk=4, prefill_budget=4, clock=TickClock())
         base.update(kw)
-        return cfg, ServingEngine(cfg, params, **base)
+        return cfg, ServingEngine(cfg, params, config=EngineConfig.of(
+                **base))
 
     def test_streaming_callbacks(self):
         cfg, eng = self._engine()
@@ -359,7 +362,8 @@ class TestContinuousEngine:
 
     def test_run_open_loop_requires_tickclock(self):
         cfg, api, params = _cfg_params()
-        eng = ServingEngine(cfg, params, max_len=32, max_batch=1)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=32, max_batch=1))
         with pytest.raises(TypeError):
             run_open_loop(eng, [Arrival(uid=0, t=0.0, prompt_len=4,
                                         max_new=2)])
@@ -389,10 +393,10 @@ class TestContinuousEngine:
         fi = FaultInjector(seeded_schedule(
             3, n_ticks=60, uids=[r.uid for r in reqs],
             rates={"nan_logits": 0.1, "alloc_fail": 0.1, "drop_tick": 0.05}))
-        eng = ServingEngine(cfg, params, max_len=96, max_batch=2,
-                            page_size=16, prefill_chunk=4, prefill_budget=8,
-                            max_retries=3, clock=TickClock(),
-                            fault_injector=fi)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=96, max_batch=2, page_size=16, prefill_chunk=4,
+                prefill_budget=8, max_retries=3, clock=TickClock(),
+                fault_injector=fi))
         trace = [(1 + 2 * i, r) for i, r in enumerate(reqs)]
         report = run_chaos(eng, trace)
         assert report.all_terminal, report.states
@@ -412,9 +416,9 @@ def _random_ops_invariants(seed):
     state."""
     cfg, api, params = _cfg_params()
     rng = np.random.default_rng(seed)
-    eng = ServingEngine(cfg, params, max_len=96, max_batch=3, page_size=16,
-                        prefill_chunk=4, prefill_budget=8,
-                        evict_policy="priority", clock=TickClock())
+    eng = ServingEngine(cfg, params, config=EngineConfig.of(
+            max_len=96, max_batch=3, page_size=16, prefill_chunk=4,
+            prefill_budget=8, evict_policy="priority", clock=TickClock()))
     reqs = []
     uid = 0
     for _ in range(120):

@@ -13,6 +13,7 @@ from _hypcompat import given, settings, st  # degrades to skips without hypothes
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import checkpoint as ckpt
+from repro.serving.config import EngineConfig
 from repro.distributed import shardlib as sl
 
 
@@ -127,9 +128,9 @@ class TestEngineWatchdog:
 
         cfg = C.get_config("tinyllama-1.1b", smoke=True)
         params = get_api(cfg).init_params(cfg, jax.random.key(0))
-        return cfg, ServingEngine(
-            cfg, params, max_len=64, max_batch=1, clock=clk,
-            fault_injector=FaultInjector(faults, clock=clk), **kw)
+        return cfg, ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=1, clock=clk,
+                fault_injector=FaultInjector(faults, clock=clk), **kw))
 
     def test_engine_watchdog_is_the_heartbeat_monitor(self):
         from repro.distributed.fault import HeartbeatMonitor

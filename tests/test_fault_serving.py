@@ -19,6 +19,7 @@ from _hypcompat import given, settings, st  # degrades to skips without hypothes
 import repro.configs as C
 from repro.core.batching import BatchSizer
 from repro.models.api import get_api
+from repro.serving.config import EngineConfig
 from repro.serving.engine import (
     InvalidTransition,
     Request,
@@ -65,7 +66,8 @@ def _clone(reqs):
 
 def _baseline_outputs(reqs, **engine_kw):
     cfg, api, params = _cfg_params()
-    eng = ServingEngine(cfg, params, **engine_kw)
+    eng = ServingEngine(cfg, params, config=EngineConfig.of(
+            **engine_kw))
     mine = _clone(reqs)
     for r in mine:
         eng.submit(r)
@@ -283,8 +285,9 @@ class TestDeadlines:
     def test_total_latency_timeout_frees_slot_and_pages(self):
         cfg, api, params = _cfg_params()
         clk = TickClock()
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=2,
-                            page_size=16, clock=clk, request_timeout_s=3.0)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=2, page_size=16, clock=clk,
+                request_timeout_s=3.0))
         (req,) = _reqs(cfg, 1, max_new=32)
         eng.submit(req)
         for _ in range(6):
@@ -299,8 +302,8 @@ class TestDeadlines:
     def test_ttft_deadline_times_out_queued_request(self):
         cfg, api, params = _cfg_params()
         clk = TickClock()
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=1, clock=clk,
-                            ttft_deadline_s=2.0)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=1, clock=clk, ttft_deadline_s=2.0))
         blocker, starved = _reqs(cfg, 2, max_new=24)
         eng.submit(blocker)
         eng.step()  # blocker takes the only slot
@@ -315,8 +318,8 @@ class TestDeadlines:
     def test_per_request_deadline_overrides_engine_default(self):
         cfg, api, params = _cfg_params()
         clk = TickClock()
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=2, clock=clk,
-                            request_timeout_s=100.0)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=2, clock=clk, request_timeout_s=100.0))
         tight, lax = _reqs(cfg, 2, max_new=32)
         tight.deadline_s = 2.0
         for r in (tight, lax):
@@ -329,8 +332,8 @@ class TestDeadlines:
 
     def test_cancel_queued_and_live(self):
         cfg, api, params = _cfg_params()
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=1,
-                            page_size=16)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=1, page_size=16))
         live, queued = _reqs(cfg, 2, max_new=16)
         eng.submit(live)
         eng.submit(queued)
@@ -343,7 +346,8 @@ class TestDeadlines:
 
     def test_resubmit_rejected(self):
         cfg, api, params = _cfg_params()
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=1)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=1))
         (req,) = _reqs(cfg, 1, max_new=2)
         eng.submit(req)
         with pytest.raises(ValueError, match="already submitted"):
@@ -361,8 +365,9 @@ class TestEvictionReadmit:
         base[1].priority = 5
         expect = _baseline_outputs(base, max_len=64, max_batch=2, page_size=16)
 
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=1,
-                            page_size=16, evict_policy="priority")
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=1, page_size=16,
+                evict_policy="priority"))
         low, high = _clone(base)
         low.priority, high.priority = 0, 5
         eng.submit(low)
@@ -387,8 +392,8 @@ class TestEvictionReadmit:
 
     def test_fifo_policy_never_preempts(self):
         cfg, api, params = _cfg_params()
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=1,
-                            evict_policy="fifo")
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=1, evict_policy="fifo"))
         low, high = _reqs(cfg, 2, max_new=6)
         high.priority = 9
         eng.submit(low)
@@ -402,8 +407,8 @@ class TestEvictionReadmit:
 
     def test_equal_priority_never_thrashes(self):
         cfg, api, params = _cfg_params()
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=1,
-                            evict_policy="priority")
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=1, evict_policy="priority"))
         a, b = _reqs(cfg, 2, max_new=5)
         eng.submit(a)
         eng.step()
@@ -415,9 +420,9 @@ class TestEvictionReadmit:
     def test_page_pool_pressure_evicts_lower_priority(self):
         cfg, api, params = _cfg_params()
         # pool fits ~one request: 8+10 tokens => 2 pages of 16 (+1 null)
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=2,
-                            page_size=16, num_pages=4,
-                            evict_policy="priority")
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=2, page_size=16, num_pages=4,
+                evict_policy="priority"))
         low, high = _reqs(cfg, 2, max_new=10)
         high.priority = 3
         eng.submit(low)
@@ -438,10 +443,10 @@ class TestEvictionReadmit:
         shared pages intact."""
         cfg, api, params = _cfg_params()
         dparams = _cfg_params(1)[2]
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=2,
-                            page_size=8, share_prefix=True,
-                            draft_cfg=cfg, draft_params=dparams, spec_k=2,
-                            evict_policy="priority", audit_every_step=True)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=2, page_size=8, share_prefix=True,
+                draft_cfg=cfg, draft_params=dparams, spec_k=2,
+                evict_policy="priority", audit_every_step=True))
         rng = np.random.default_rng(3)
         shared = rng.integers(0, cfg.vocab, size=12).astype(np.int32)
         a = Request(uid=0, prompt=shared.copy(), max_new_tokens=10)
@@ -471,10 +476,10 @@ class TestEvictionReadmit:
         every page it owned, including the boundary page COW'd that tick."""
         cfg, api, params = _cfg_params()
         dparams = _cfg_params(1)[2]
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=2,
-                            page_size=8, share_prefix=True,
-                            draft_cfg=cfg, draft_params=dparams, spec_k=3,
-                            audit_every_step=True)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=2, page_size=8, share_prefix=True,
+                draft_cfg=cfg, draft_params=dparams, spec_k=3,
+                audit_every_step=True))
         rng = np.random.default_rng(4)
         shared = rng.integers(0, cfg.vocab, size=12).astype(np.int32)
         # budgets chosen so the shorter request's last tick writes across
@@ -502,8 +507,8 @@ class TestNumericGuard:
         base = _reqs(cfg, 2, max_new=8)
         expect = _baseline_outputs(base, max_len=64, max_batch=2)
         fi = FaultInjector([Fault("nan_logits", tick=3, uid=0)])
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=2,
-                            fault_injector=fi, max_retries=1)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=2, fault_injector=fi, max_retries=1))
         reqs = _clone(base)
         for r in reqs:
             eng.submit(r)
@@ -520,8 +525,8 @@ class TestNumericGuard:
     def test_retries_exhausted_fails_only_the_poisoned_request(self):
         cfg, api, params = _cfg_params()
         fi = FaultInjector([Fault("nan_logits", tick=2, uid=0, n_ticks=50)])
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=2,
-                            fault_injector=fi, max_retries=2)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=2, fault_injector=fi, max_retries=2))
         victim, bystander = _reqs(cfg, 2, max_new=6)
         for r in (victim, bystander):
             eng.submit(r)
@@ -535,8 +540,9 @@ class TestNumericGuard:
     def test_poison_all_live_does_not_crash_engine(self):
         cfg, api, params = _cfg_params()
         fi = FaultInjector([Fault("nan_logits", tick=2, n_ticks=99)])
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=2,
-                            page_size=16, fault_injector=fi, max_retries=0)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=2, page_size=16, fault_injector=fi,
+                max_retries=0))
         reqs = _reqs(cfg, 2, max_new=6)
         for r in reqs:
             eng.submit(r)
@@ -556,9 +562,9 @@ class TestDegradationLadder:
         fi = FaultInjector([Fault("dead_draft", tick=3, n_ticks=999)])
         with warnings.catch_warnings():
             warnings.simplefilter("ignore")
-            eng = ServingEngine(cfg, params, max_len=64, max_batch=2,
-                                draft_cfg=cfg, draft_params=dparams,
-                                spec_k=2, fault_injector=fi)
+            eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                    max_len=64, max_batch=2, draft_cfg=cfg,
+                    draft_params=dparams, spec_k=2, fault_injector=fi))
             reqs = _clone(base)
             for r in reqs:
                 eng.submit(r)
@@ -582,8 +588,9 @@ class TestDegradationLadder:
         try:
             with warnings.catch_warnings():
                 warnings.simplefilter("ignore")
-                eng = ServingEngine(cfg, params, max_len=64, max_batch=2,
-                                    page_size=16, fault_injector=fi)
+                eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                        max_len=64, max_batch=2, page_size=16,
+                        fault_injector=fi))
                 reqs = _clone(base)
                 for r in reqs:
                     eng.submit(r)
@@ -606,10 +613,10 @@ class TestDegradationLadder:
             warnings.simplefilter("ignore")
             # an unreachable floor guarantees the collapse trigger fires
             # right after warmup, independent of the actual draft quality
-            eng = ServingEngine(cfg, params, max_len=96, max_batch=2,
-                                draft_cfg=cfg, draft_params=dparams,
-                                spec_k=2, spec_fallback_accept=1.01,
-                                spec_fallback_min_ticks=3)
+            eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                    max_len=96, max_batch=2, draft_cfg=cfg,
+                    draft_params=dparams, spec_k=2,
+                    spec_fallback_accept=1.01, spec_fallback_min_ticks=3))
             reqs = _reqs(cfg, 2, max_new=24)
             for r in reqs:
                 eng.submit(r)
@@ -625,8 +632,9 @@ class TestWatchdog:
         cfg, api, params = _cfg_params()
         clk = TickClock()
         fi = FaultInjector([Fault("drop_tick", tick=3, n_ticks=4)], clock=clk)
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=1, clock=clk,
-                            fault_injector=fi, watchdog_timeout_s=2.5)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=1, clock=clk, fault_injector=fi,
+                watchdog_timeout_s=2.5))
         (req,) = _reqs(cfg, 1, max_new=20)
         eng.submit(req)
         stalled = []
@@ -647,9 +655,9 @@ class TestWatchdog:
         clk = TickClock()
         fi = FaultInjector([Fault("slow_tick", tick=4, delay_s=10.0)],
                            clock=clk)
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=1, clock=clk,
-                            fault_injector=fi, watchdog_timeout_s=5.0,
-                            request_timeout_s=8.0)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=1, clock=clk, fault_injector=fi,
+                watchdog_timeout_s=5.0, request_timeout_s=8.0))
         (req,) = _reqs(cfg, 1, max_new=16)
         eng.submit(req)
         for _ in range(6):
@@ -694,8 +702,9 @@ class TestChaosSoak:
         try:
             with warnings.catch_warnings():
                 warnings.simplefilter("ignore")
-                eng = ServingEngine(cfg, params, clock=clk, fault_injector=fi,
-                                    max_retries=3, **engine_kw)
+                eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                        clock=clk, fault_injector=fi, max_retries=3,
+                        **engine_kw))
                 reqs = _clone(base)
                 trace = [(1 + (i % 5), r) for i, r in enumerate(reqs)]
                 report = run_chaos(eng, trace, tick_dt=1.0, max_ticks=300)
@@ -745,10 +754,10 @@ class TestChaosSoak:
             clock=clk)
         with warnings.catch_warnings():
             warnings.simplefilter("ignore")
-            eng = ServingEngine(cfg, params, max_len=64, max_batch=2,
-                                page_size=16, share_prefix=True,
-                                evict_policy="priority", clock=clk,
-                                fault_injector=fi, max_retries=3)
+            eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                    max_len=64, max_batch=2, page_size=16, share_prefix=True,
+                    evict_policy="priority", clock=clk, fault_injector=fi,
+                    max_retries=3))
             reqs = _clone(base)
             for i, r in enumerate(reqs):
                 r.priority = i % 3
@@ -766,8 +775,8 @@ class TestChaosSoak:
         base = _reqs(cfg, 4, max_new=6, seed=15)
         expect = _baseline_outputs(base, max_len=64, max_batch=2,
                                    page_size=16)
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=2,
-                            page_size=16, clock=TickClock())
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=2, page_size=16, clock=TickClock()))
         reqs = _clone(base)
         report = run_chaos(eng, [(1, r) for r in reqs])
         assert report.all_terminal and report.leaked_pages == 0

@@ -31,6 +31,7 @@ from repro.kernels import block_sparse as BS
 from repro.kernels import ops, ref
 from repro.models import layers as L
 from repro.models.api import get_api, kv_bytes_per_token
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Request, ServingEngine
 
 RNG = np.random.default_rng(0)
@@ -251,8 +252,8 @@ class TestInt8KVCache:
         must not change results)."""
         api, params, _, _ = self._setup()
         plan = api.compress(TINY, params, PC)
-        eng = ServingEngine(TINY, plan.params, max_len=64, max_batch=3,
-                            plan=plan, kv_dtype="int8")
+        eng = ServingEngine(TINY, plan.params, plan=plan, config=EngineConfig.of(
+                max_len=64, max_batch=3, kv_dtype="int8"))
         rng = np.random.default_rng(2)
         reqs = [
             Request(uid=i, prompt=rng.integers(0, TINY.vocab, size=6).astype(np.int32),

@@ -1,0 +1,340 @@
+"""Heterogeneous serving (serving/mixed.py + the unified cache-kind
+registry): one MixedServingEngine admits a mixed text / enc-dec / VLM /
+recurrent stream with per-family bit-parity against solo engines, shared
+page-pool accounting stays fair and leak-free under exhaustion, and every
+family's serving state round-trips through the shardlib cache-kind
+registry."""
+
+import functools
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.batching import BatchSizer, MixedSizer
+from repro.distributed import shardlib as sl
+from repro.models.api import get_api, supports_paged_kv
+from repro.serving.config import CacheConfig, EngineConfig
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.mixed import MixedServingEngine, WorkloadSpec
+
+
+def _family(arch, seed=0):
+    cfg = C.get_config(arch, smoke=True)
+    api = get_api(cfg)
+    params = api.init_params(cfg, jax.random.key(seed))
+    return cfg, api, params
+
+
+def _reqs(cfg, api, n, seed, uid0=0, max_new=5, prompt_len=4):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        prompt = rng.integers(1, cfg.vocab,
+                              size=prompt_len + (i % 2)).astype(np.int32)
+        extras = {}
+        if "patches" in api.extra_keys:
+            extras["patches"] = rng.normal(
+                size=(cfg.n_patches, cfg.d_model)).astype(np.float32)
+        if "frames" in api.extra_keys:
+            extras["frames"] = rng.normal(
+                size=(cfg.n_frames, cfg.d_model)).astype(np.float32)
+        out.append(Request(uid=uid0 + i, prompt=prompt, max_new_tokens=max_new,
+                           extras=extras or None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache-kind registry: every family's serving state is made of registered
+# kinds (the tentpole's "one unified cache leaf kind" claim, round-tripped)
+# ---------------------------------------------------------------------------
+
+
+class TestCacheKindRegistry:
+    EXPECTED = {
+        # name -> (positional, paged, family)
+        "attn.kv": (True, False, "attn"),
+        "attn.kv_scale": (True, False, "attn"),
+        "attn.kv_pages": (True, True, "attn"),
+        "attn.kv_scale_pages": (True, True, "attn"),
+        "page_table": (True, True, "attn"),
+        "encdec.xkv": (True, False, "encdec"),
+        "encdec.xkv_pages": (True, True, "encdec"),
+        "encdec.xpage_table": (True, True, "encdec"),
+        "rec.state": (False, False, "recurrent"),
+        "mlstm.state": (False, False, "ssm"),
+        "slstm.state": (False, False, "ssm"),
+    }
+
+    def test_registry_contents(self):
+        table = sl.cache_kind_table()
+        assert set(self.EXPECTED) <= set(table)
+        for name, (positional, paged, family) in self.EXPECTED.items():
+            kind = sl.cache_kind(name)
+            assert kind.name == name
+            assert kind.positional is positional, name
+            assert kind.paged is paged, name
+            assert kind.family == family, name
+        assert list(table) == sorted(table)  # docs render it in order
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(KeyError):
+            sl.cache_kind("attn.kv_typo")
+
+    @staticmethod
+    def _kind_axes():
+        """Every registered axes tuple (single-leaf kinds plus the
+        sub-leaves of dict kinds)."""
+        out = set()
+        for kind in sl.cache_kind_table().values():
+            if isinstance(kind.axes, dict):
+                out.update(tuple(v) for v in kind.axes.values())
+            else:
+                out.add(tuple(kind.axes))
+        return out
+
+    @pytest.mark.parametrize("arch", C.ARCH_IDS)
+    def test_every_family_cache_is_registered_kinds(self, arch):
+        """All ten families: every leaf of the family's cache axes matches
+        a registered cache kind (possibly behind leading stack dims) —
+        there is no unregistered serving state left."""
+        cfg, api, _ = _family(arch)
+        kinds = self._kind_axes()
+        variants = [{}]
+        if supports_paged_kv(cfg):
+            variants.append({"paged": True})
+        for kw in variants:
+            try:
+                axes = api.cache_axes(cfg, **kw)
+            except TypeError:
+                continue  # family signature has no paged variant
+            leaves = jax.tree.leaves(
+                axes, is_leaf=lambda x: isinstance(x, tuple))
+            assert leaves, arch
+            for leaf in leaves:
+                leaf = tuple(leaf)
+                assert any(leaf[len(leaf) - len(k):] == k for k in kinds
+                           if len(k) <= len(leaf)), (arch, kw, leaf)
+
+    @pytest.mark.parametrize("arch", C.ARCH_IDS)
+    def test_registry_shape_parity_with_cache(self, arch):
+        """The registered axes rank-match the actual cache leaves (shape
+        probe, no allocation): the registry describes real storage."""
+        cfg, api, _ = _family(arch)
+        cache = jax.eval_shape(functools.partial(
+            api.init_cache, cfg, 2, 8, jnp.dtype(cfg.compute_dtype)))
+        axes = api.cache_axes(cfg)
+        cache_leaves = jax.tree.leaves(cache)
+        axes_leaves = jax.tree.leaves(
+            axes, is_leaf=lambda x: isinstance(x, tuple))
+        assert len(cache_leaves) == len(axes_leaves), arch
+        for leaf, ax in zip(cache_leaves, axes_leaves):
+            assert len(leaf.shape) == len(tuple(ax)), (arch, leaf.shape, ax)
+
+
+# ---------------------------------------------------------------------------
+# enc-dec / VLM paged serving parity (the newly-paged families)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["whisper-tiny", "internvl2-2b"])
+def test_paged_engine_matches_contiguous(arch):
+    """Whisper and InternVL now page: same greedy outputs as the contiguous
+    engine, clean audit, every page back on the free list at the end."""
+    cfg, api, params = _family(arch)
+    out = {}
+    for page_size in (None, 8):
+        eng = ServingEngine(cfg, params, config=EngineConfig(
+            max_len=32, max_batch=2, seed=0,
+            cache=CacheConfig(page_size=page_size)))
+        reqs = _reqs(cfg, api, 3, seed=11, max_new=4)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done()
+        assert all(r.done and r.error is None for r in reqs)
+        out[page_size] = [list(r.output) for r in reqs]
+        if page_size:
+            assert eng.paged
+            eng.audit_pages()
+            assert eng.allocator.used_pages == 0
+    assert out[None] == out[8]
+
+
+# ---------------------------------------------------------------------------
+# mixed engine: routing, parity, shared-pool fairness
+# ---------------------------------------------------------------------------
+
+
+class TestMixedEngine:
+    def test_spec_validation(self):
+        cfg, _, params = _family("tinyllama-1.1b")
+        spec = WorkloadSpec(name="a", cfg=cfg, params=params,
+                            config=EngineConfig(max_len=16, max_batch=1))
+        with pytest.raises(ValueError, match="at least one workload"):
+            MixedServingEngine([])
+        with pytest.raises(ValueError, match="duplicate workload names"):
+            MixedServingEngine([spec, spec])
+        with pytest.raises(ValueError, match="weight must be positive"):
+            MixedServingEngine([WorkloadSpec(
+                name="b", cfg=cfg, params=params, weight=0.0,
+                config=EngineConfig(max_len=16, max_batch=1))])
+        from repro.serving.paged import PageAllocator
+
+        with pytest.raises(ValueError, match="owns the shared pool"):
+            MixedServingEngine([WorkloadSpec(
+                name="c", cfg=cfg, params=params,
+                config=EngineConfig(max_len=16, max_batch=1, cache=CacheConfig(
+                    page_size=8, allocator=PageAllocator(4))))])
+        with pytest.raises(ValueError, match="max_batch"):
+            # paged member with open-ended batch: pool cannot be sized
+            MixedServingEngine([WorkloadSpec(
+                name="d", cfg=cfg, params=params,
+                config=EngineConfig(max_len=16, cache=CacheConfig(
+                    page_size=8)))])
+
+    def test_unknown_workload_name(self):
+        cfg, api, params = _family("tinyllama-1.1b")
+        eng = MixedServingEngine([WorkloadSpec(
+            name="text", cfg=cfg, params=params,
+            config=EngineConfig(max_len=16, max_batch=1))])
+        with pytest.raises(KeyError, match="unknown workload"):
+            eng.submit("txet", _reqs(cfg, api, 1, seed=0)[0])
+
+    @pytest.mark.slow
+    def test_mixed_stream_bit_parity_with_solo(self):
+        """The acceptance criterion: a mixed text+whisper+VLM+recurrent
+        stream produces per-family greedy outputs bit-identical to each
+        family served alone — shared capacity, zero shared state."""
+        mix = ["tinyllama-1.1b", "whisper-tiny", "internvl2-2b", "xlstm-350m"]
+        ec = EngineConfig(max_len=32, max_batch=2, seed=0,
+                          cache=CacheConfig(page_size=8))
+        solo_out = {}
+        fams = {}
+        for fi, arch in enumerate(mix):
+            cfg, api, params = _family(arch, seed=fi)
+            fams[arch] = (cfg, api, params)
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                eng = ServingEngine(cfg, params, config=ec)
+            reqs = _reqs(cfg, api, 2, seed=40 + fi, max_new=4)
+            for r in reqs:
+                eng.submit(r)
+            eng.run_until_done()
+            assert all(r.done and r.error is None for r in reqs), arch
+            solo_out[arch] = [list(r.output) for r in reqs]
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            mixed = MixedServingEngine(
+                [WorkloadSpec(name=a, cfg=fams[a][0], params=fams[a][2],
+                              config=ec) for a in mix])
+        mixed_reqs = {a: _reqs(fams[a][0], fams[a][1], 2, seed=40 + fi,
+                               max_new=4)
+                      for fi, a in enumerate(mix)}
+        for a in mix:
+            for r in mixed_reqs[a]:
+                mixed.submit(a, r)
+        mixed.run_until_done()
+        mixed.audit_pages()
+        assert mixed.allocator.used_pages == 0
+        for a in mix:
+            assert [list(r.output) for r in mixed_reqs[a]] == solo_out[a], a
+        agg = mixed.aggregate_stats()
+        assert agg.completed == 2 * len(mix)
+        assert agg.failed == 0
+
+    @pytest.mark.slow
+    def test_shared_pool_exhaustion_is_fair(self):
+        """A pool too small for both families at once: admission
+        back-pressures into per-family queues, both families still finish
+        everything (no starvation, no failures) and the allocator audits
+        clean with zero pages live."""
+        t_cfg, t_api, t_params = _family("tinyllama-1.1b")
+        w_cfg, w_api, w_params = _family("whisper-tiny", seed=1)
+        ec = EngineConfig(max_len=32, max_batch=2, seed=0,
+                          cache=CacheConfig(page_size=8))
+        # per-request worst case: text 32/8 = 4 pages; whisper 4 + frame
+        # pages.  Pool holds ONE whisper request plus one text request —
+        # far below 2 slots/family worth of pages.
+        w_frames = -(-w_cfg.n_frames // 8)
+        pool = 1 + (4 + w_frames) + 4
+        mixed = MixedServingEngine(
+            [WorkloadSpec(name="text", cfg=t_cfg, params=t_params, config=ec),
+             WorkloadSpec(name="audio", cfg=w_cfg, params=w_params,
+                          config=ec)],
+            num_pages=pool)
+        text = _reqs(t_cfg, t_api, 4, seed=5, uid0=0, max_new=4)
+        audio = _reqs(w_cfg, w_api, 4, seed=6, uid0=100, max_new=4)
+        for tr, ar in zip(text, audio):
+            mixed.submit("text", tr)
+            mixed.submit("audio", ar)
+        mixed.run_until_done()
+        mixed.audit_pages()
+        for r in text + audio:
+            assert r.done and r.error is None, (r.uid, r.state, r.error)
+        assert mixed.allocator.used_pages == 0
+        agg = mixed.aggregate_stats()
+        assert agg.completed == 8 and agg.failed == 0
+
+    def test_contiguous_only_mix_has_no_allocator(self):
+        cfg, api, params = _family("xlstm-350m")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            mixed = MixedServingEngine([WorkloadSpec(
+                name="rec", cfg=cfg, params=params,
+                config=EngineConfig(max_len=16, max_batch=1,
+                                    cache=CacheConfig(page_size=8)))])
+        # xlstm cannot page -> no paged member -> no shared pool to own
+        assert mixed.allocator is None
+        mixed.audit_pages()  # no-op, must not raise
+
+
+# ---------------------------------------------------------------------------
+# MixedSizer: blended accounting
+# ---------------------------------------------------------------------------
+
+
+class TestMixedSizer:
+    def _sizers(self):
+        a = BatchSizer(n_params=1_000_000, kv_bytes_per_token=64,
+                       context_len=128)
+        b = BatchSizer(n_params=4_000_000, kv_bytes_per_token=256,
+                       context_len=128)
+        return {"a": a, "b": b}
+
+    def test_validation(self):
+        s = self._sizers()
+        with pytest.raises(ValueError, match="keys differ"):
+            MixedSizer(sizers=s, weights={"a": 1.0})
+        with pytest.raises(ValueError, match="at least one family"):
+            MixedSizer(sizers={}, weights={})
+        with pytest.raises(ValueError, match="positive"):
+            MixedSizer(sizers=s, weights={"a": 0.0, "b": 0.0})
+
+    def test_shares_and_batches(self):
+        ms = MixedSizer(sizers=self._sizers(), weights={"a": 3.0, "b": 1.0})
+        assert ms.share("a") == pytest.approx(0.75)
+        bs = ms.batches(8)
+        assert bs == {"a": 6, "b": 2}
+        assert ms.batches(1) == {"a": 1, "b": 1}  # every family >= 1
+
+    def test_per_family_n_opt_unchanged_by_mixing(self):
+        s = self._sizers()
+        ms = MixedSizer(sizers=s, weights={"a": 1.0, "b": 2.0})
+        assert ms.n_opt == {"a": s["a"].n_opt, "b": s["b"].n_opt}
+
+    def test_step_time_is_sum_and_floor_is_time_weighted(self):
+        s = self._sizers()
+        ms = MixedSizer(sizers=s, weights={"a": 1.0, "b": 1.0})
+        bs = ms.batches(8)
+        expect = sum(s[n].step_time(b) for n, b in bs.items())
+        assert ms.step_time(8) == pytest.approx(expect)
+        assert ms.blended_floor(8) == pytest.approx(
+            sum(bs.values()) / expect)
+        # the time-weighted floor is below the faster family's solo rate
+        fast = max(bs["a"] / s["a"].step_time(bs["a"]),
+                   bs["b"] / s["b"].step_time(bs["b"]))
+        assert ms.blended_floor(8) <= fast

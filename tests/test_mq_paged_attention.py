@@ -29,6 +29,7 @@ from repro.kernels import ops
 from repro.launch import mesh as M
 from repro.models import layers as L
 from repro.models.api import get_api
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -274,7 +275,8 @@ def _run_forced(cfg, params, force_kernel, **kw):
     whole lifetime of its jitted closures (trace-time dispatch)."""
     prev = L.force_attention_kernel(force_kernel)
     try:
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=3, **kw)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=3, **kw))
         reqs = _requests(cfg)
         for r in reqs:
             eng.submit(r)
@@ -336,9 +338,9 @@ class TestEngineKernelParity:
         sizer = BatchSizer(n_params=10**6, spec_k=2, spec_accept=0.0)
         prev = L.force_attention_kernel(False)
         try:
-            eng = ServingEngine(cfg, params, max_len=64, max_batch=3,
-                                page_size=8, draft_cfg=cfg,
-                                draft_params=params, spec_k=2, sizer=sizer)
+            eng = ServingEngine(cfg, params, sizer=sizer, config=EngineConfig.of(
+                    max_len=64, max_batch=3, page_size=8, draft_cfg=cfg,
+                    draft_params=params, spec_k=2))
             reqs = _requests(cfg)
             for r in reqs:
                 eng.submit(r)

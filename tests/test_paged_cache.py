@@ -13,6 +13,7 @@ from repro.core.batching import BatchSizer, mean_decode_context
 from repro.kernels import ops
 from repro.models import layers as L
 from repro.models.api import get_api, supports_paged_kv
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.paged import (
     NULL_PAGE,
@@ -235,7 +236,8 @@ class TestPagedEngine:
         return cfg, api, api.init_params(cfg, jax.random.key(0))
 
     def _trace(self, cfg, params, **kw):
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=3, **kw)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=3, **kw))
         reqs = _mk_requests(cfg, [5, 9, 3, 12, 7], [4, 6, 5, 4, 6])
         for r in reqs:
             eng.submit(r)
@@ -261,7 +263,8 @@ class TestPagedEngine:
     def test_ragged_page_geometry_completes(self):
         # max_len not a multiple of page_size: table just gets a ragged tail
         cfg, api, params = self._params()
-        eng = ServingEngine(cfg, params, max_len=60, max_batch=2, page_size=8)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=60, max_batch=2, page_size=8))
         reqs = _mk_requests(cfg, [5, 9], [4, 6])
         for r in reqs:
             eng.submit(r)
@@ -275,8 +278,8 @@ class TestPagedEngine:
             0, cfg.vocab, size=12).astype(np.int32)  # 1 full page + 4 tokens
 
         def run(share):
-            eng = ServingEngine(cfg, params, max_len=64, max_batch=3,
-                                page_size=8, share_prefix=share)
+            eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                    max_len=64, max_batch=3, page_size=8, share_prefix=share))
             reqs = [Request(uid=i, prompt=base.copy(), max_new_tokens=6)
                     for i in range(3)]
             for r in reqs:
@@ -308,7 +311,8 @@ class TestPagedEngine:
         retain the page a live sequence is about to decode into and check the
         engine copies instead of mutating it."""
         cfg, api, params = self._params()
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=1, page_size=8)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=1, page_size=8))
         req = Request(uid=0,
                       prompt=np.random.default_rng(3).integers(
                           0, cfg.vocab, size=6).astype(np.int32),
@@ -333,8 +337,8 @@ class TestPagedEngine:
     def test_pool_exhaustion_queues_instead_of_crashing(self):
         cfg, api, params = self._params()
         # 4 usable pages, each request needs 2: at most 2 concurrent
-        eng = ServingEngine(cfg, params, max_len=64, max_batch=4,
-                            page_size=8, num_pages=5)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=64, max_batch=4, page_size=8, num_pages=5))
         reqs = _mk_requests(cfg, [6, 6, 6, 6, 6], [6, 6, 6, 6, 6])
         for r in reqs:
             eng.submit(r)
@@ -351,7 +355,8 @@ class TestPagedEngine:
 
     def test_admission_beyond_table_capacity_raises(self):
         cfg, api, params = self._params()
-        eng = ServingEngine(cfg, params, max_len=32, max_batch=2, page_size=8)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=32, max_batch=2, page_size=8))
         eng.submit(Request(uid=0,
                            prompt=np.zeros((30,), np.int32),
                            max_new_tokens=8))
@@ -359,11 +364,16 @@ class TestPagedEngine:
             eng.step()
 
     def test_unsupported_family_falls_back(self):
-        cfg = C.get_config("whisper-tiny", smoke=True)
+        # attention-free stacks have no positionally-addressed cache to
+        # page; enc-dec/VLM decoders DO page since the heterogeneous-
+        # serving rework (covered by test_mixed_serving.py).
+        cfg = C.get_config("xlstm-350m", smoke=True)
         assert not supports_paged_kv(cfg)
+        assert supports_paged_kv(C.get_config("whisper-tiny", smoke=True))
+        assert supports_paged_kv(C.get_config("internvl2-2b", smoke=True))
         api = get_api(cfg)
         params = api.init_params(cfg, jax.random.key(0))
         with pytest.warns(UserWarning, match="paged"):
-            eng = ServingEngine(cfg, params, max_len=32, max_batch=2,
-                                page_size=8)
+            eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                    max_len=32, max_batch=2, page_size=8))
         assert not eng.paged

@@ -8,6 +8,7 @@ import pytest
 import repro.configs as C
 from repro.core.batching import BatchSizer
 from repro.models.api import get_api
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -20,7 +21,8 @@ def _engine(arch="tinyllama-1.1b", max_batch=4, max_len=64):
     cfg = C.get_config(arch, smoke=True)
     api = get_api(cfg)
     params = api.init_params(cfg, jax.random.key(0))
-    return cfg, api, params, ServingEngine(cfg, params, max_len=max_len, max_batch=max_batch)
+    return cfg, api, params, ServingEngine(cfg, params, config=EngineConfig.of(
+            max_len=max_len, max_batch=max_batch))
 
 
 class TestEngine:

@@ -26,6 +26,7 @@ from repro.launch import mesh as M
 from repro.models import layers as L  # noqa: F401 — registers cache kinds
 from repro.models import transformer as T  # noqa: F401 — registers page_table
 from repro.models.api import get_api
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -230,9 +231,9 @@ def _requests(cfg, n=5):
 
 
 def _serve(cfg, plan, mesh, rules):
-    eng = ServingEngine(cfg, None, max_len=64, max_batch=4, plan=plan,
-                        kv_dtype="int8", page_size=8, share_prefix=True,
-                        mesh=mesh, rules=rules)
+    eng = ServingEngine(cfg, None, plan=plan, config=EngineConfig.of(
+            max_len=64, max_batch=4, kv_dtype="int8", page_size=8,
+            share_prefix=True, mesh=mesh, rules=rules))
     reqs = _requests(cfg)
     for r in reqs:
         eng.submit(r)
@@ -278,11 +279,13 @@ class TestMeshedServingParity:
         sizer = BatchSizer(n_params=10**6, hbm_bw=pm.TPU_V5E_HBM_BW * 20)
         n_opt = sizer.n_opt
         assert 1 < n_opt < 16  # a real (clampable) balance point
-        solo = ServingEngine(cfg, None, max_len=64, plan=plan, sizer=sizer)
+        solo = ServingEngine(cfg, None, plan=plan, sizer=sizer, config=EngineConfig.of(
+                max_len=64))
         assert solo.max_batch == n_opt
         mesh = M.make_serving_mesh("4x2")
-        meshed = ServingEngine(cfg, None, max_len=64, plan=plan, sizer=sizer,
-                               mesh=mesh, rules=M.rules_for(cfg, None, mesh=mesh))
+        meshed = ServingEngine(cfg, None, plan=plan, sizer=sizer, config=EngineConfig.of(
+                max_len=64, mesh=mesh,
+                rules=M.rules_for(cfg, None, mesh=mesh)))
         assert meshed.data_parallel == 4
         assert meshed.max_batch == min(64, 4 * n_opt)
 

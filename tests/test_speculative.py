@@ -23,6 +23,7 @@ from repro.core import weight_plan as WP
 from repro.core.batching import BatchSizer
 from repro.launch import mesh as M
 from repro.models.api import get_api, supports_spec_decode
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -293,7 +294,8 @@ def _requests(cfg, lens=(6, 9, 3, 12, 7), max_new=(8, 6, 8, 5, 7)):
 
 
 def _run(cfg, params, reqs=None, **kw):
-    eng = ServingEngine(cfg, params, max_len=64, max_batch=3, **kw)
+    eng = ServingEngine(cfg, params, config=EngineConfig.of(
+            max_len=64, max_batch=3, **kw))
     reqs = reqs or _requests(cfg)
     for r in reqs:
         eng.submit(r)
@@ -423,8 +425,9 @@ class TestSpeculativeEngine:
         cfg, api, params, good, _ = setup
         other = C.get_config("llama3.2-1b")  # 128k vocab vs smoke 256
         with pytest.raises(ValueError, match="vocab"):
-            ServingEngine(cfg, params, max_len=64, max_batch=2,
-                          draft_cfg=other, draft_params={"x": 0}, spec_k=2)
+            ServingEngine(cfg, params, config=EngineConfig.of(
+                    max_len=64, max_batch=2, draft_cfg=other,
+                    draft_params={"x": 0}, spec_k=2))
 
     def test_unsupported_family_falls_back(self, setup):
         """A stateful (recurrent) family warns and serves without
@@ -434,15 +437,16 @@ class TestSpeculativeEngine:
         rec_api = get_api(rec)
         rec_params = rec_api.init_params(rec, jax.random.key(0))
         with pytest.warns(UserWarning, match="speculative"):
-            eng = ServingEngine(rec, rec_params, max_len=32, max_batch=2,
-                                draft_cfg=rec, draft_params=rec_params,
-                                spec_k=2)
+            eng = ServingEngine(rec, rec_params, config=EngineConfig.of(
+                    max_len=32, max_batch=2, draft_cfg=rec,
+                    draft_params=rec_params, spec_k=2))
         assert eng.spec_k == 0
 
     def test_spec_headroom_enforced(self, setup):
         cfg, api, params, good, _ = setup
-        eng = ServingEngine(cfg, params, max_len=16, max_batch=1,
-                            draft_cfg=cfg, draft_params=good, spec_k=4)
+        eng = ServingEngine(cfg, params, config=EngineConfig.of(
+                max_len=16, max_batch=1, draft_cfg=cfg, draft_params=good,
+                spec_k=4))
         eng.submit(Request(uid=0,
                            prompt=np.arange(6, dtype=np.int32),
                            max_new_tokens=8))  # 6 + 8 + 4 > 16
@@ -481,10 +485,10 @@ class TestSpeculativeMesh:
         # place through the registry's node expanders like the target's):
         # draft argmax == target argmax, so acceptance is high and the
         # accepted-prefix path is actually exercised under the mesh.
-        eng = ServingEngine(cfg, None, max_len=64, max_batch=3, plan=plan,
-                            kv_dtype="int8", page_size=8, share_prefix=True,
-                            mesh=mesh, rules=rules, draft_cfg=cfg,
-                            draft_params=plan.params, spec_k=spec_k)
+        eng = ServingEngine(cfg, None, plan=plan, config=EngineConfig.of(
+                max_len=64, max_batch=3, kv_dtype="int8", page_size=8,
+                share_prefix=True, mesh=mesh, rules=rules, draft_cfg=cfg,
+                draft_params=plan.params, spec_k=spec_k))
         reqs = _requests(cfg, lens=(8, 8, 5), max_new=(6, 6, 5))
         for r in reqs:
             eng.submit(r)

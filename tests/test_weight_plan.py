@@ -21,6 +21,7 @@ from repro.core import weight_plan as WP
 from repro.core.batching import BatchSizer
 from repro.core.pruning import BlockPruneConfig, block_mask, expand_block_mask
 from repro.models.api import get_api
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Request, ServingEngine
 
 TINY = ModelConfig(
@@ -250,7 +251,8 @@ class TestModelParity:
         batching changes scheduling, never results)."""
         api, params, _, _ = self._setup()
         plan = api.compress(TINY, params, PC)
-        eng = ServingEngine(TINY, plan.params, max_len=64, max_batch=3, plan=plan)
+        eng = ServingEngine(TINY, plan.params, plan=plan, config=EngineConfig.of(
+                max_len=64, max_batch=3))
         rng = np.random.default_rng(2)
         reqs = [
             Request(uid=i, prompt=rng.integers(0, TINY.vocab, size=6).astype(np.int32),

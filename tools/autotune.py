@@ -117,6 +117,15 @@ def main(argv=None):
     doc = AT.tuned_plan_doc(cfg, result, space=space, constraints=cons)
     AT.save_tuned(args.out, doc)
     print(f"[autotune] wrote {args.out}")
+    # round-trip the artifact through the serving adapter NOW (the same
+    # EngineConfig route serve.py --autotune-plan takes), so a knob the
+    # search picked but the engine cannot route fails at tune time
+    ec = AT.engine_config(doc)
+    print(f"[autotune] serving surface: max_batch={ec.max_batch} "
+          f"max_len={ec.max_len} kv={ec.cache.kv_dtype or 'fp'} "
+          f"page_size={ec.cache.page_size or 0} "
+          f"pool_pages={ec.cache.num_pages or 0} "
+          f"expected_context={ec.cache.expected_context or 0}")
 
     if args.plan_cache:
         import jax

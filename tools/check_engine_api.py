@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""CI api-lint: ``ServingEngine.__init__`` must not re-grow loose kwargs.
+
+The EngineConfig redesign (repro/serving/config.py) collapsed ~25 engine
+keyword arguments into four subsystem dataclasses; this lint pins the
+constructor surface to exactly
+
+    def __init__(self, cfg, params, *, config=None, plan=None, sizer=None,
+                 **legacy)
+
+so a new serving knob MUST land as an ``EngineConfig`` field (where
+``.of``/``.flat``/``from_legacy`` pick it up mechanically) instead of as a
+new named parameter.  Pure AST inspection — no imports, no jax.
+
+    python tools/check_engine_api.py
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+ENGINE = ROOT / "src/repro/serving/engine.py"
+
+ALLOWED_POSITIONAL = ["self", "cfg", "params"]
+ALLOWED_KWONLY = {"config", "plan", "sizer"}
+VARKW = "legacy"
+
+
+def main() -> int:
+    tree = ast.parse(ENGINE.read_text(), filename=str(ENGINE))
+    init = None
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "ServingEngine":
+            for item in node.body:
+                if isinstance(item, ast.FunctionDef) and item.name == "__init__":
+                    init = item
+            break
+    if init is None:
+        print("api-lint: ServingEngine.__init__ not found (engine moved?)")
+        return 1
+    errors = []
+    pos = [a.arg for a in init.args.posonlyargs + init.args.args]
+    if pos != ALLOWED_POSITIONAL:
+        errors.append(f"positional parameters {pos} != {ALLOWED_POSITIONAL}")
+    kwonly = {a.arg for a in init.args.kwonlyargs}
+    extra = sorted(kwonly - ALLOWED_KWONLY)
+    if extra:
+        errors.append(
+            f"new keyword parameter(s) {extra}: serving knobs belong in an "
+            f"EngineConfig dataclass (repro/serving/config.py), not on "
+            f"ServingEngine.__init__")
+    missing = sorted(ALLOWED_KWONLY - kwonly)
+    if missing:
+        errors.append(f"missing keyword parameter(s) {missing}")
+    if init.args.vararg is not None:
+        errors.append("unexpected *args")
+    if init.args.kwarg is None or init.args.kwarg.arg != VARKW:
+        errors.append(
+            f"**{VARKW} (the deprecation shim) must stay the only catch-all")
+    if errors:
+        for e in errors:
+            print(f"api-lint: {e}")
+        return 1
+    print(f"api-lint: ServingEngine.__init__ surface is "
+          f"(cfg, params, *, {', '.join(sorted(ALLOWED_KWONLY))}, **{VARKW})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
